@@ -1,0 +1,125 @@
+"""Benchmarks reproducing the paper's own tables/figures.
+
+  * effort_table  — 'Programming effort' (Sec. VI-A): LOC per backend /
+                    frontend, vs the paper's ≤3000-per-backend claim and
+                    the 26k/47k inside-framework baselines.
+  * inference_fig3 — Fig. 3 left: inference latency (B=1), framework-eager
+                    reference vs SOL-optimized, on the host CPU.
+  * training_fig3 — Fig. 3 right: training step latency (B=16 CNN / B=64
+                    MLP), reference vs SOL.
+
+The paper's absolute speedups are device-specific (Xeon 6126 / SX-Aurora /
+GPUs); what reproduces here is the *direction and mechanism*: whole-graph
+fusion beats op-at-a-time dispatch, with the win largest on memory-bound
+nets (DenseNet-like chains) and smallest on pure-matmul MLPs (the paper:
+'for the MLP there is no difference visible').
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn: Callable[[], object], warmup: int = 3, iters: int = 20
+          ) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6      # µs
+
+
+def effort_table() -> List[Tuple[str, float, str]]:
+    import repro
+    root = Path(repro.__file__).parent
+
+    def loc(sub: str) -> int:
+        return sum(len(p.read_text().splitlines())
+                   for p in (root / sub).rglob("*.py"))
+
+    rows = []
+    rows.append(("loc_backend_registry", loc("backends"),
+                 "paper: <=3000/backend"))
+    rows.append(("loc_kernels_all", loc("kernels"),
+                 "shared DFP codegen (5 kernels)"))
+    rows.append(("loc_frontend", loc("frontends"),
+                 "paper: ~2400/frontend"))
+    rows.append(("loc_core_compiler", loc("core"), "IR+passes+executor"))
+    rows.append(("loc_distributed", loc("distributed"), "beyond-paper"))
+    rows.append(("loc_models", loc("models"), "beyond-paper (10 archs)"))
+    return rows
+
+
+def _bench_pair(model, shape, train: bool = False,
+                batch: int = 1) -> Tuple[float, float]:
+    """(reference_us, sol_us) for one model."""
+    from repro.frontends.optimize import optimize
+    x = np.random.default_rng(0).standard_normal(shape).astype(np.float32)
+    xj = jnp.asarray(x)
+
+    sol = optimize(model, shape)
+    if not train:
+        ref_us = _time(lambda: model(xj))
+        sol_params = sol._params_for_call()
+        fn = sol._fn
+        sol_us = _time(lambda: fn(sol_params, xj))
+        return ref_us, sol_us
+
+    # training: d(loss)/d(params) through eager layers vs SOL whole-graph
+    params = sol._params_for_call()
+    graph_fn = sol._fn
+
+    def sol_loss(p, xx):
+        return jnp.mean(graph_fn(p, xx) ** 2)
+
+    sol_grad = jax.jit(jax.grad(sol_loss))
+
+    sd = model.state_dict()
+    keys = sorted(sd)
+
+    def eager_loss(plist, xx):
+        model.load_state_dict(dict(zip(keys, plist)))
+        return jnp.mean(model(xx) ** 2)
+
+    # eager autograd re-traces through per-layer jits (dispatch per layer)
+    eager_grad = jax.grad(eager_loss)
+    ref_us = _time(lambda: eager_grad([sd[k] for k in keys], xj), 1, 5)
+    sol_us = _time(lambda: sol_grad(params, xj), 1, 5)
+    return ref_us, sol_us
+
+
+def inference_fig3() -> List[Tuple[str, float, str]]:
+    from repro.frontends import nn
+    rows = []
+    cases = [
+        ("mlp_B1", nn.mlp_8192(3, 2048, 2048, 1000), (1, 2048)),
+        ("small_cnn_B1", nn.small_cnn(), (1, 3, 64, 64)),
+        ("depthwise_cnn_B1", nn.depthwise_cnn(), (1, 3, 64, 64)),
+    ]
+    for name, model, shape in cases:
+        ref, sol = _bench_pair(model, shape)
+        rows.append((f"infer_{name}_reference", ref, ""))
+        rows.append((f"infer_{name}_sol", sol,
+                     f"speedup={ref / sol:.2f}x"))
+    return rows
+
+
+def training_fig3() -> List[Tuple[str, float, str]]:
+    from repro.frontends import nn
+    rows = []
+    cases = [
+        ("mlp_B64", nn.mlp_8192(3, 1024, 1024, 256), (64, 1024)),
+        ("small_cnn_B16", nn.small_cnn(), (16, 3, 32, 32)),
+    ]
+    for name, model, shape in cases:
+        ref, sol = _bench_pair(model, shape, train=True)
+        rows.append((f"train_{name}_reference", ref, ""))
+        rows.append((f"train_{name}_sol", sol,
+                     f"speedup={ref / sol:.2f}x"))
+    return rows

@@ -1,0 +1,107 @@
+"""Perf-iteration harness: lower one cell, print the three roofline terms
+and the top FLOPs/traffic/collective contributors; append tagged results to
+results/perf_log.jsonl for the §Perf before/after log.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen2-1.5b \
+      --shape train_4k --tag baseline
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+LOG = Path(__file__).resolve().parents[1] / "results" / "perf_log.jsonl"
+
+
+def top_contributors(text: str, n_devices: int, k: int = 8):
+    from repro.launch import hlo_analysis as HA
+    comps = HA.parse_module(text)
+    mult = HA.compute_multipliers(comps)
+    kinds = mult.pop("__kinds__")
+    dots, traffic, colls = [], [], []
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if m <= 0:
+            continue
+        is_fusion = kinds.get(name) in ("fusion", "apply")
+        for op in comp.ops:
+            if op.opcode == "dot":
+                meta = ""
+                i = op.attrs.find("op_name=")
+                if i >= 0:
+                    meta = op.attrs[i + 9:i + 89]
+                dots.append((m * HA.dot_flops(op, comp.types), op.name,
+                             op.type_str[:40], meta))
+            if is_fusion:
+                continue
+            base = op.opcode.replace("-start", "")
+            if base in HA.COLLECTIVES:
+                kind, size, t = HA.collective_traffic(op, n_devices)
+                meta = ""
+                i = op.attrs.find("op_name=")
+                if i >= 0:
+                    meta = op.attrs[i + 9:i + 89]
+                colls.append((m * t, kind, op.type_str[:40], meta))
+                continue
+            if op.opcode in HA._NO_TRAFFIC or op.opcode.endswith("-done"):
+                continue
+            traffic.append((m * HA._op_traffic(op, comp, comps),
+                            op.opcode, op.name[:36], op.type_str[:40]))
+    for lst, label, unit in ((dots, "FLOPS", 1e12), (traffic, "TRAFFIC", 1e9),
+                             (colls, "COLLECTIVE", 1e9)):
+        lst.sort(reverse=True, key=lambda r: r[0])
+        print(f"-- top {label} --")
+        for r in lst[:k]:
+            u = "T" if unit == 1e12 else "GB"
+            print(f"  {r[0] / unit:10.2f}{u} {' '.join(str(x) for x in r[1:])[:130]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="1pod")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--top", type=int, default=8)
+    ap.add_argument("--no-detail", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell, memory_summary
+    from repro.launch import hlo_analysis as HA
+
+    t0 = time.time()
+    lowered, mesh, cfg, shape = lower_cell(args.arch, args.shape,
+                                           args.mesh == "2pod")
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    n_dev = mesh.devices.size
+    res = HA.analyze(text, n_dev)
+    mem = memory_summary(compiled)
+    f, b, i = (res["flops_per_device"], res["hbm_bytes_per_device"],
+               res["ici_bytes_per_device"])
+    terms = {"compute_s": f / 197e12, "memory_s": b / 819e9,
+             "collective_s": i / 50e9}
+    rec = {"tag": args.tag, "arch": cfg.name, "shape": args.shape,
+           "mesh": args.mesh, **terms,
+           "flops_per_device": f, "hbm_bytes_per_device": b,
+           "ici_bytes_per_device": i,
+           "temp_bytes": mem.get("temp_size_in_bytes", 0),
+           "collectives": res["collectives"],
+           "compile_s": round(time.time() - t0, 1)}
+    LOG.parent.mkdir(exist_ok=True, parents=True)
+    with LOG.open("a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    dom = max(terms, key=terms.get)
+    print(f"[{args.tag}] {cfg.name} × {args.shape}: "
+          f"compute {terms['compute_s']:.3f}s  memory {terms['memory_s']:.3f}s  "
+          f"collective {terms['collective_s']:.3f}s  → {dom} dominant; "
+          f"temp {rec['temp_bytes'] / 2**30:.1f}GiB")
+    if not args.no_detail:
+        top_contributors(text, n_dev, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Render the data-driven sections of EXPERIMENTS.md (dry-run matrix +
+roofline tables + baseline-vs-optimized comparison) from results/*.jsonl."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def load(path):
+    recs = {}
+    p = ROOT / "results" / path
+    if not p.exists():
+        return {}
+    for line in p.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        recs[(r["arch"], r["shape"], r.get("mesh", "1pod"))] = r
+    return recs
+
+
+def dryrun_matrix(recs) -> str:
+    archs = sorted({k[0] for k in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    out = [f"| arch | " + " | ".join(shapes) + " |",
+           "|---" * (len(shapes) + 1) + "|"]
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            cells = []
+            for m in ("1pod", "2pod"):
+                r = recs.get((a, s, m))
+                cells.append("✓" if r and r["status"] == "ok" else
+                             ("skip" if r and r["status"] == "skipped"
+                              else "?"))
+            row.append("/".join(cells))
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
+def roofline_md(recs, mesh="1pod") -> str:
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from benchmarks.roofline import roofline_row
+    rows = []
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        row = roofline_row(r)
+        if row:
+            rows.append(row)
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | useful | roofline% | temp GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{100 * r['roofline_fraction']:.2f}% | "
+            f"{r['temp_bytes'] / 2**30:.1f} |")
+    return "\n".join(out)
+
+
+def before_after(base, opt) -> str:
+    out = ["| arch × shape | term | baseline | optimized | Δ |",
+           "|---|---|---|---|---|"]
+    for key in sorted(set(base) & set(opt)):
+        a, s, m = key
+        if m != "1pod":
+            continue
+        b, o = base[key], opt[key]
+        if b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        for term, bw in (("flops", 197e12), ("hbm_bytes", 819e9),
+                         ("ici_bytes", 50e9)):
+            tb = b.get(f"{term}_per_device", 0) / bw
+            to = o.get(f"{term}_per_device", 0) / bw
+            if tb <= 0:
+                continue
+            d = (to - tb) / tb * 100
+            if abs(d) < 1:
+                continue
+            out.append(f"| {a} × {s} | {term} | {tb:.3f}s | {to:.3f}s | "
+                       f"{d:+.0f}% |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    opt = load("dryrun.jsonl")
+    base = load("dryrun_baseline.jsonl")
+    print("## matrix\n")
+    print(dryrun_matrix(opt))
+    print("\n## roofline 1pod\n")
+    print(roofline_md(opt, "1pod"))
+    print("\n## roofline 2pod\n")
+    print(roofline_md(opt, "2pod"))
+    print("\n## before/after\n")
+    print(before_after(base, opt))

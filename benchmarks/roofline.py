@@ -1,0 +1,119 @@
+"""Roofline analysis over the dry-run results (deliverable g).
+
+Per (arch × shape × mesh) cell, from the loop-aware HLO accounting in
+results/dryrun.jsonl:
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory_s     = HLO_bytes_per_device / HBM_bw               (819e9)
+  collective_s = ICI_bytes_per_device / link_bw              (50e9)
+
+dominant term = bottleneck; MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D
+(MoE); usefulness ratio = MODEL_FLOPS / HLO_FLOPs (catches remat and
+redundant compute).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.jsonl"
+
+
+def load_cells(path: Path = RESULTS) -> List[dict]:
+    recs = {}
+    if not path.exists():
+        return []
+    for line in path.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r   # last wins
+    return list(recs.values())
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import get_config
+    from repro.models import backbone as B
+    from repro.models.config import SHAPES
+    cfg = get_config(arch)
+    shp = SHAPES[shape]
+    n_active = B.count_active_params(cfg)
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * n_active * shp.global_batch / n_devices
+
+
+def roofline_row(r: dict) -> Optional[dict]:
+    if r.get("status") != "ok":
+        return None
+    f = r["flops_per_device"]
+    b = r["hbm_bytes_per_device"]
+    i = r["ici_bytes_per_device"]
+    terms = {"compute": f / PEAK_FLOPS, "memory": b / HBM_BW,
+             "collective": i / ICI_BW}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(r["arch"], r["shape"], r["n_devices"])
+    bound = max(terms.values())
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": terms["compute"], "memory_s": terms["memory"],
+        "collective_s": terms["collective"], "dominant": dom,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / f if f else 0.0,
+        # roofline fraction: useful-compute time over the bound the program
+        # actually hits (1.0 = the chip spends all time on model math)
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "temp_bytes": r.get("memory", {}).get("temp_size_in_bytes", 0),
+    }
+
+
+def table(mesh: str = "1pod") -> List[dict]:
+    rows = []
+    for r in load_cells():
+        if r.get("mesh") != mesh:
+            continue
+        row = roofline_row(r)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def render(rows: List[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{100 * r['roofline_fraction']:6.2f}%")
+    return "\n".join(out)
+
+
+def csv_rows() -> List[tuple]:
+    out = []
+    for r in table("1pod"):
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        bound_us = max(r["compute_s"], r["memory_s"],
+                       r["collective_s"]) * 1e6
+        out.append((name, bound_us,
+                    f"dom={r['dominant']};roofline={r['roofline_fraction']:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print(render(table("1pod")))
+    print()
+    print(render(table("2pod")))

@@ -1,0 +1,42 @@
+"""Benchmark harness — one function per paper table (+ beyond-paper
+tables).  Prints ``name,us_per_call,derived`` CSV.
+
+  effort      paper Sec. VI-A programming-effort table (LOC; derived notes)
+  inference   paper Fig. 3 left  (B=1, reference vs SOL)
+  training    paper Fig. 3 right (B=16/64, reference vs SOL)
+  roofline    deliverable (g): per (arch × shape) terms from the dry-run
+  serving     beyond-paper decode throughput smoke
+
+Run: PYTHONPATH=src python -m benchmarks.run [table ...]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"effort", "inference", "training",
+                                  "roofline", "serving"}
+    rows = []
+    if "effort" in which:
+        from . import paper_tables
+        rows += [(n, v, d) for n, v, d in paper_tables.effort_table()]
+    if "inference" in which:
+        from . import paper_tables
+        rows += paper_tables.inference_fig3()
+    if "training" in which:
+        from . import paper_tables
+        rows += paper_tables.training_fig3()
+    if "roofline" in which:
+        from . import roofline
+        rows += roofline.csv_rows()
+    if "serving" in which:
+        from . import serving
+        rows += serving.decode_bench()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Serving micro-benchmarks (beyond-paper table): smoke-size prefill/decode
+throughput per architecture family on the host CPU."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_bench(archs=("qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b"),
+                 batch: int = 2, steps: int = 8) -> List[Tuple[str, float, str]]:
+    from repro.configs import get_smoke
+    from repro.models import backbone as B
+    rows = []
+    for arch in archs:
+        cfg = get_smoke(arch)
+        params = B.init_params(cfg, jax.random.PRNGKey(0))
+        cache = B.init_cache(cfg, batch, 32)
+        toks = jnp.zeros((batch, 1), jnp.int32)
+        decode = jax.jit(
+            lambda p, c, t, pos: B.decode_step(cfg, p, c, t, pos),
+            donate_argnums=(1,))
+        logits, cache = decode(params, cache, toks, jnp.asarray(0))
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for t in range(1, steps + 1):
+            logits, cache = decode(params, cache, toks, jnp.asarray(t))
+        jax.block_until_ready(logits)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        rows.append((f"decode_{arch}_smoke", us,
+                     f"{batch * 1e6 / us:.0f}tok/s"))
+    return rows

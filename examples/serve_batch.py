@@ -1,0 +1,67 @@
+"""Serve a small model with batched requests: continuous-batching-style
+decode loop over a KV cache, with packed host→device staging of the
+request batch (the paper's packed-memcopy mechanism in use).
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-1.6b]
+"""
+import argparse
+import sys
+import time
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import backbone as B
+from repro.runtime.packed import transfer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params = B.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + args.gen
+
+    # batched requests arrive as many small host arrays → ONE packed DMA
+    host_prompts = [np.random.randint(0, cfg.vocab, (args.prompt_len,),
+                                      np.int32) for _ in range(args.batch)]
+    staged = transfer(host_prompts)
+    prompts = jnp.stack(staged)
+    print(f"staged {args.batch} requests via packed transfer")
+
+    decode = jax.jit(
+        lambda p, c, t, pos: B.decode_step(cfg, p, c, t, pos),
+        donate_argnums=(1,))
+
+    cache = B.init_cache(cfg, args.batch, max_seq)
+    logits = None
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, cache, prompts[:, t:t + 1],
+                               jnp.asarray(t))
+    toks = jnp.argmax(logits[:, -1], -1)[:, None]
+    outs = [toks]
+    for t in range(args.prompt_len, max_seq - 1):
+        logits, cache = decode(params, cache, toks, jnp.asarray(t))
+        toks = jnp.argmax(logits[:, -1], -1)[:, None]
+        outs.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
+    total = args.batch * (max_seq - 1)
+    print(f"{cfg.name}: {total} tokens in {dt:.2f}s "
+          f"({total / dt:.0f} tok/s on host CPU)")
+    for i in range(min(2, args.batch)):
+        print(f"  req {i}: …{gen[i, :10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

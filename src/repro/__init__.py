@@ -1,0 +1,4 @@
+"""repro — SOL (Weber & Huici, 2020) reproduced as a JAX/TPU middleware,
+scaled to multi-pod meshes.  See DESIGN.md for the paper→TPU mapping."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from .registry import (Backend, get_backend, available_backends,
+                       register_backend)
+
+__all__ = ["Backend", "get_backend", "available_backends", "register_backend"]

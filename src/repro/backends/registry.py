@@ -1,0 +1,139 @@
+"""SOL device backends (Sec. IV of the paper).
+
+A backend is a small table: per-op implementations for the two optimizing
+modules plus layout preferences.  The paper's point — that a backend is ≤3 kLOC
+because DFP codegen is shared and only 'flavours' differ — maps here to:
+backends share all lowering logic in ``core.executor`` and only override
+
+  * ``dfp_impl``   — how a DFP fusion group is executed
+                     ('compose' = XLA fusion; 'pallas' = the dfp_fused kernel,
+                     interpret-mode on CPU, compiled on real TPU),
+  * ``dnn_impl``   — how Linear/Conv are executed (jnp.dot_general einsum vs
+                     the Pallas matmul kernel),
+  * layout preferences (the paper: Linear weights (out,in) on CPU but
+    (in,out) on SX-Aurora; here: einsum operand order / conv layouts),
+  * hardware constants used by the cost model / roofline.
+
+Backends:
+  ``xla``              — pure jnp; runs anywhere; the dry-run/production path
+                         (XLA:TPU does its own fusion — this is the DNN-library
+                         analogue of "use the vendor stack").
+  ``pallas_interpret`` — TPU Pallas kernels executed with interpret=True on
+                         CPU; used for kernel validation in this container.
+  ``pallas_tpu``       — TPU Pallas kernels, compiled (requires real TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from ..core.ir import Module, Node, OpKind
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float        # FLOP/s per chip
+    hbm_bandwidth: float          # bytes/s per chip
+    ici_bandwidth: float          # bytes/s per link
+    hbm_bytes: int                # capacity per chip
+    vmem_bytes: int               # on-chip scratch
+    mxu_dim: int = 128            # systolic array tile
+    lanes: int = 128              # VPU lane count
+    sublanes: int = 8
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    hbm_bytes=16 * 1024 ** 3,
+    vmem_bytes=128 * 1024 ** 2,
+)
+
+HOST_CPU = HardwareSpec(
+    name="host_cpu",
+    peak_flops_bf16=0.2e12,
+    hbm_bandwidth=40e9,
+    ici_bandwidth=10e9,
+    hbm_bytes=64 * 1024 ** 3,
+    vmem_bytes=32 * 1024 ** 2,   # ~LLC slice; DFP cache-residency analogue
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    dfp_impl: str                 # 'compose' | 'pallas'
+    dnn_impl: str                 # 'einsum'  | 'pallas'
+    interpret: bool               # Pallas interpret mode
+    hw: HardwareSpec
+    # layout preferences — the paper's per-device layout election
+    linear_weight_layout: str     # 'oi' (out,in) vs 'io' (in,out)
+    conv_layout: str              # 'nchw' vs 'nhwc'
+
+    def preferred_layout(self, node: Node) -> str:
+        if node.op in (OpKind.LINEAR, OpKind.MATMUL):
+            return self.linear_weight_layout
+        if node.op is OpKind.CONV2D:
+            return self.conv_layout
+        return self.conv_layout  # DFP ops follow the surrounding data layout
+
+    def impl_for(self, node: Node) -> str:
+        if node.module is Module.DNN:
+            return self.dnn_impl
+        return self.dfp_impl
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(b: Backend) -> Backend:
+    _REGISTRY[b.name] = b
+    return b
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_backends() -> Dict[str, Backend]:
+    return dict(_REGISTRY)
+
+
+# CPU-like backend: XLA does the fusion, einsum hits the host BLAS.  Mirrors
+# the paper's X86 backend (ISPC + DNNL) in role: 'vendor stack does the work'.
+register_backend(Backend(
+    name="xla",
+    dfp_impl="compose",
+    dnn_impl="einsum",
+    interpret=False,
+    hw=TPU_V5E,                 # production target of the lowered program
+    linear_weight_layout="oi",  # paper: (out,in) fastest on CPUs
+    conv_layout="nchw",
+))
+
+# TPU Pallas kernels validated on CPU via interpret mode.
+register_backend(Backend(
+    name="pallas_interpret",
+    dfp_impl="pallas",
+    dnn_impl="einsum",          # MXU matmul stays on XLA in interpret mode
+    interpret=True,
+    hw=TPU_V5E,
+    linear_weight_layout="io",  # paper: (in,out) on the long-vector machine;
+    conv_layout="nhwc",         # TPU prefers minor-most channels (lane dim)
+))
+
+# Real-TPU backend: same kernels, compiled.
+register_backend(Backend(
+    name="pallas_tpu",
+    dfp_impl="pallas",
+    dnn_impl="pallas",
+    interpret=False,
+    hw=TPU_V5E,
+    linear_weight_layout="io",
+    conv_layout="nhwc",
+))

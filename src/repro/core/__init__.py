@@ -1,0 +1,4 @@
+"""SOL core: graph IR, compiler passes, executor, and the sol.optimize API."""
+from . import ir, passes, executor
+
+__all__ = ["ir", "passes", "executor"]

@@ -1,0 +1,234 @@
+"""SOL code generation / execution (the paper's 'SOL generates code for these
+and compiles it for the target devices').
+
+On JAX the 'generated code' is a closed-over Python function lowered through
+jit; DFP fusion groups either compose (XLA fuses them — the CPU/'vendor stack'
+flavour) or dispatch to the ``kernels.dfp_fused`` Pallas kernel (the TPU
+flavour, interpret-mode on CPU).  DNN nodes go to dot_general/conv in the
+operand order elected by the layout pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from .ir import Graph, Module, Node, OpKind
+
+if TYPE_CHECKING:    # avoid circular import (backends.registry imports core.ir)
+    from ..backends.registry import Backend
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# individual op lowerings
+# ---------------------------------------------------------------------------
+
+def _lower_linear(n: Node, x: Array, w: Array, b: Array | None,
+                  backend: "Backend") -> Array:
+    # layout pass decides operand order: 'oi' keeps (out,in) and contracts on
+    # the last dim of both; 'io' stores (in,out) — fewer transposes for
+    # backends whose matmul wants the reduction dim major (paper Sec. III-A).
+    if n.layout == "io":
+        y = jnp.einsum("...i,io->...o", x, w.T if w.shape[0] == n.attrs["out_features"] else w)
+    else:
+        wt = w if w.shape[0] == n.attrs["out_features"] else w.T
+        y = jnp.einsum("...i,oi->...o", x, wt)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _lower_conv2d(n: Node, x: Array, w: Array, b: Array | None,
+                  backend: "Backend") -> Array:
+    stride = n.attrs.get("stride", 1)
+    padding = n.attrs.get("padding", 0)
+    groups = n.attrs.get("groups", 1)
+    strides = (stride, stride) if isinstance(stride, int) else stride
+    pads = ((padding, padding), (padding, padding)) \
+        if isinstance(padding, int) else padding
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=strides, padding=pads,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups)
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def _pool(n: Node, x: Array, reduce_fn, init) -> Array:
+    k = n.attrs.get("kernel", 2)
+    s = n.attrs.get("stride", k)
+    ks = (k, k) if isinstance(k, int) else k
+    ss = (s, s) if isinstance(s, int) else s
+    return jax.lax.reduce_window(
+        x, init, reduce_fn, window_dimensions=(1, 1) + ks,
+        window_strides=(1, 1) + ss, padding="VALID")
+
+
+_ELEMENTWISE: Dict[OpKind, Callable[..., Array]] = {
+    OpKind.RELU: lambda x: jnp.maximum(x, 0.0),
+    OpKind.GELU: jax.nn.gelu,
+    OpKind.SILU: jax.nn.silu,
+    OpKind.SIGMOID: jax.nn.sigmoid,
+    OpKind.TANH: jnp.tanh,
+    OpKind.EXP: jnp.exp,
+    OpKind.IDENTITY: lambda x: x,
+}
+
+
+def _lower_node(n: Node, vals: List[Array], backend: "Backend") -> Array:
+    op = n.op
+    if op in _ELEMENTWISE:
+        return _ELEMENTWISE[op](vals[0])
+    if op is OpKind.ADD:
+        return vals[0] + vals[1]
+    if op is OpKind.SUB:
+        return vals[0] - vals[1]
+    if op is OpKind.MUL:
+        return vals[0] * vals[1]
+    if op is OpKind.DIV:
+        return vals[0] / vals[1]
+    if op is OpKind.BIAS_ADD:
+        x, b = vals
+        shape = [1] * x.ndim
+        axis = n.attrs.get("axis", -1)
+        shape[axis] = b.shape[0]
+        return x + b.reshape(shape)
+    if op is OpKind.SCALE:
+        return vals[0] * n.attrs["value"]
+    if op is OpKind.SOFTCAP:
+        c = n.attrs["cap"]
+        return jnp.tanh(vals[0] / c) * c
+    if op is OpKind.MAXPOOL:
+        y = _pool(n, vals[0], jax.lax.max, -jnp.inf)
+        mv = n.attrs.get("min_value")
+        if mv is not None:          # the folded ReLU (paper's optimization)
+            y = jnp.maximum(y, mv)
+        return y
+    if op is OpKind.AVGPOOL:
+        k = n.attrs.get("kernel", 2)
+        area = k * k if isinstance(k, int) else k[0] * k[1]
+        return _pool(n, vals[0], jax.lax.add, 0.0) / area
+    if op is OpKind.GLOBALPOOL:
+        return vals[0].mean(axis=(2, 3))
+    if op is OpKind.LAYERNORM:
+        x, g, b = vals
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + n.attrs.get("eps", 1e-5)) * g + b
+    if op is OpKind.RMSNORM:
+        x, g = vals
+        ms = (x.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+        return (x * jax.lax.rsqrt(ms + n.attrs.get("eps", 1e-6)).astype(x.dtype)) * g
+    if op is OpKind.BATCHNORM:
+        x, g, b, m, v = vals
+        shape = [1, -1] + [1] * (x.ndim - 2)
+        inv = jax.lax.rsqrt(v + n.attrs.get("eps", 1e-5))
+        return (x - m.reshape(shape)) * (inv * g).reshape(shape) + b.reshape(shape)
+    if op is OpKind.SOFTMAX:
+        return jax.nn.softmax(vals[0], axis=n.attrs.get("axis", -1))
+    if op is OpKind.DROPOUT:
+        return vals[0]  # inference identity; training handled by frontend rng
+    if op is OpKind.FLATTEN:
+        return vals[0].reshape(vals[0].shape[0], -1)
+    if op is OpKind.RESHAPE:
+        return vals[0].reshape(n.attrs["shape"])
+    if op is OpKind.TRANSPOSE:
+        return jnp.transpose(vals[0], n.attrs["perm"])
+    if op is OpKind.REORDER:
+        return vals[0]
+    if op is OpKind.LINEAR:
+        return _lower_linear(n, vals[0], vals[1],
+                             vals[2] if len(vals) > 2 else None, backend)
+    if op is OpKind.MATMUL:
+        return vals[0] @ vals[1]
+    if op is OpKind.CONV2D:
+        return _lower_conv2d(n, vals[0], vals[1],
+                             vals[2] if len(vals) > 2 else None, backend)
+    raise NotImplementedError(f"lowering for {op}")
+
+
+# ---------------------------------------------------------------------------
+# DFP fusion-group lowering
+# ---------------------------------------------------------------------------
+
+# ops the Pallas dfp_fused kernel supports as a single VMEM-resident program
+_DFP_KERNEL_OPS = {
+    OpKind.RELU, OpKind.GELU, OpKind.SILU, OpKind.SIGMOID, OpKind.TANH,
+    OpKind.EXP, OpKind.ADD, OpKind.SUB, OpKind.MUL, OpKind.DIV,
+    OpKind.BIAS_ADD, OpKind.SCALE, OpKind.SOFTCAP, OpKind.RMSNORM,
+    OpKind.LAYERNORM, OpKind.IDENTITY, OpKind.DROPOUT,
+}
+
+
+def _lower_fused(n: Node, env: Dict[int, Array], backend: "Backend") -> Array:
+    body = n.body
+    kernel_ok = (backend.dfp_impl == "pallas"
+                 and all(b.op in _DFP_KERNEL_OPS for b in body)
+                 and all(b.spec.shape == body[-1].spec.shape or
+                         b.op in (OpKind.BIAS_ADD,) for b in body))
+    if kernel_ok:
+        from ..kernels.dfp_fused import ops as dfp_ops
+        program, operands = _compile_dfp_program(n, env)
+        if program is not None:
+            return dfp_ops.dfp_fused(program, operands,
+                                     interpret=backend.interpret)
+    # fallback: compose — under jit, XLA fuses the chain (the 'vendor stack'
+    # flavour of DFP); numerically identical to the kernel path.
+    local: Dict[int, Array] = dict(env)
+    out = None
+    for b in body:
+        vals = [local[id(i)] for i in b.inputs]
+        out = _lower_node(b, vals, backend)
+        local[id(b)] = out
+    return out
+
+
+def _compile_dfp_program(n: Node, env: Dict[int, Array]):
+    """Translate a fusion-group body into the dfp_fused kernel's static
+    program encoding.  Returns (program, operands) or (None, None) when the
+    chain has shapes the kernel does not handle (then we compose instead)."""
+    from ..kernels.dfp_fused.program import encode_program
+    try:
+        return encode_program(n, env)
+    except NotImplementedError:
+        return None, None
+
+
+# ---------------------------------------------------------------------------
+# graph → callable
+# ---------------------------------------------------------------------------
+
+def lower_graph(g: Graph, backend: "Backend") -> Callable[..., Any]:
+    """Return fn(params: dict, *inputs) -> outputs evaluating the graph."""
+    order = g.topo()
+    input_ids = [id(i) for i in g.inputs]
+    param_items = sorted(g.params.items())
+
+    def fn(params: Dict[str, Array], *inputs: Array):
+        env: Dict[int, Array] = {}
+        for nid, x in zip(input_ids, inputs):
+            env[nid] = x
+        for name, node in param_items:
+            env[id(node)] = params[name]
+        for n in order:
+            if id(n) in env:
+                continue
+            if n.op is OpKind.FUSED:
+                env[id(n)] = _lower_fused(n, env, backend)
+            elif n.op in (OpKind.INPUT, OpKind.PARAM):
+                raise ValueError(f"unbound source node {n}")
+            else:
+                vals = [env[id(i)] for i in n.inputs]
+                env[id(n)] = _lower_node(n, vals, backend)
+        outs = tuple(env[id(o)] for o in g.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    return fn

@@ -1,0 +1,213 @@
+"""SOL compiler passes (Sec. III-A of the paper).
+
+Pipeline (mirrors the paper's order):
+
+  1. ``simplify``          — high-level mathematical optimizations on the IR
+                             (ReLU⊕MaxPool folding, transpose cancellation,
+                             dead-node elimination, identity removal).
+  2. ``assign_modules``    — per-layer optimizing-module election: Convolution
+                             and Linear → DNN module; everything else → DFP;
+                             exception: grouped convolutions with
+                             groups == out_channels (depthwise, MobileNet-style)
+                             → DFP, because they reduce to a WeightedPooling.
+  3. ``form_fusion_groups``— DFP region formation: maximal chains of fusable
+                             nodes are collapsed into FUSED nodes, which the
+                             backend lowers to a single depth-first kernel
+                             (registers/cache in the paper; VMEM on TPU).
+  4. ``assign_layouts``    — per-backend memory-layout election (e.g. Linear
+                             weights (out,in) on CPU-like backends vs (in,out)
+                             on long-vector backends), inserting the minimal
+                             number of REORDER nodes.
+
+Each pass returns the (mutated) graph so they compose with ``functools.reduce``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from .ir import (DFP_FUSABLE, Graph, Module, Node, OpKind, TensorSpec)
+
+
+# ----------------------------------------------------------------------------
+# 1. high-level mathematical simplifications
+# ----------------------------------------------------------------------------
+
+def _fold_relu_maxpool(g: Graph) -> int:
+    """The paper's flagship example: a ReLU followed or preceded by a
+    MaxPooling is removed by clamping the pooling's minimum value to 0
+    (max(maxpool(x), 0) == maxpool(max(x, 0)) == maxpool_{min=0}(x))."""
+    folded = 0
+    cons = g.consumers()
+    for n in list(g.topo()):
+        if n.op is OpKind.RELU:
+            src = n.inputs[0]
+            users = cons.get(n, [])
+            # relu -> maxpool : fold into the pool
+            if len(users) == 1 and users[0].op is OpKind.MAXPOOL:
+                pool = users[0]
+                pool.attrs["min_value"] = 0.0
+                g.replace(n, src)  # pool now reads src directly via rewire
+                pool.inputs = [src if i is n else i for i in pool.inputs]
+                folded += 1
+            # maxpool -> relu : fold into the pool
+            elif src.op is OpKind.MAXPOOL and len(cons.get(src, [])) == 1:
+                src.attrs["min_value"] = 0.0
+                g.replace(n, src)
+                folded += 1
+    return folded
+
+
+def _cancel_transposes(g: Graph) -> int:
+    """transpose(transpose(x, p), p⁻¹) → x."""
+    cancelled = 0
+    for n in list(g.topo()):
+        if n.op is OpKind.TRANSPOSE and n.inputs[0].op is OpKind.TRANSPOSE:
+            inner = n.inputs[0]
+            p_out = n.attrs.get("perm")
+            p_in = inner.attrs.get("perm")
+            if p_out and p_in:
+                comp = tuple(p_in[i] for i in p_out)
+                if comp == tuple(range(len(comp))):
+                    g.replace(n, inner.inputs[0])
+                    cancelled += 1
+    return cancelled
+
+
+def _drop_identities(g: Graph) -> int:
+    dropped = 0
+    for n in list(g.topo()):
+        if n.op in (OpKind.IDENTITY, OpKind.DROPOUT) and \
+                not n.attrs.get("training", False):
+            g.replace(n, n.inputs[0])
+            dropped += 1
+    return dropped
+
+
+def simplify(g: Graph) -> Graph:
+    g.attrs_log = getattr(g, "attrs_log", [])
+    g.attrs_log.append({
+        "relu_maxpool_folded": _fold_relu_maxpool(g),
+        "transposes_cancelled": _cancel_transposes(g),
+        "identities_dropped": _drop_identities(g),
+    })
+    g.validate()
+    return g
+
+
+# ----------------------------------------------------------------------------
+# 2. optimizing-module assignment (DFP vs DNN)
+# ----------------------------------------------------------------------------
+
+def assign_modules(g: Graph) -> Graph:
+    for n in g.topo():
+        if n.op in (OpKind.INPUT, OpKind.PARAM, OpKind.OUTPUT):
+            continue
+        if n.op in (OpKind.LINEAR, OpKind.MATMUL):
+            n.module = Module.DNN
+        elif n.op is OpKind.CONV2D:
+            groups = n.attrs.get("groups", 1)
+            out_c = n.attrs.get("out_channels")
+            # depthwise convs reduce to WeightedPooling → DFP (paper Sec III-A)
+            if groups > 1 and groups == out_c:
+                n.module = Module.DFP
+                n.attrs["as_weighted_pool"] = True
+            else:
+                n.module = Module.DNN
+        else:
+            n.module = Module.DFP
+    return g
+
+
+# ----------------------------------------------------------------------------
+# 3. DFP fusion-group formation
+# ----------------------------------------------------------------------------
+
+def form_fusion_groups(g: Graph) -> Graph:
+    """Collapse maximal single-consumer chains of fusable DFP nodes into FUSED
+    nodes.  The depth-first insight: inside a group, intermediate tensors never
+    round-trip to main memory (HBM on TPU) — they live in registers/VMEM."""
+    cons = g.consumers()
+
+    def fusable(n: Node) -> bool:
+        return (n.module is Module.DFP and n.op in DFP_FUSABLE
+                and n.op is not OpKind.FUSED)
+
+    visited: set = set()
+    for n in g.topo():
+        if id(n) in visited or not fusable(n):
+            continue
+        # grow a chain downstream while the single consumer is fusable
+        chain: List[Node] = [n]
+        visited.add(id(n))
+        cur = n
+        while True:
+            users = [u for u in cons.get(cur, []) if u.op is not OpKind.OUTPUT]
+            if len(users) == 1 and fusable(users[0]) \
+                    and id(users[0]) not in visited:
+                # all *other* inputs of the next node must come from outside
+                # the chain or be params (side inputs are allowed: residuals,
+                # bias tensors etc. become extra kernel operands)
+                cur = users[0]
+                chain.append(cur)
+                visited.add(id(cur))
+            else:
+                break
+        if len(chain) < 2:
+            continue
+        in_chain = {id(c) for c in chain}
+        side_inputs: List[Node] = []
+        for c in chain:
+            for i in c.inputs:
+                if id(i) not in in_chain and i not in side_inputs:
+                    side_inputs.append(i)
+        fused = Node(OpKind.FUSED, side_inputs, chain[-1].spec,
+                     attrs={"length": len(chain)},
+                     name=f"fused[{'+'.join(c.op.value for c in chain)}]",
+                     body=chain)
+        fused.module = Module.DFP
+        g.replace(chain[-1], fused)
+        cons = g.consumers()
+    g.validate()
+    return g
+
+
+# ----------------------------------------------------------------------------
+# 4. layout assignment
+# ----------------------------------------------------------------------------
+
+def assign_layouts(g: Graph, backend: "object") -> Graph:
+    """Per-backend layout election.  The backend exposes
+    ``preferred_layout(node) -> str`` (e.g. 'oi' vs 'io' for Linear weights,
+    'nchw' vs 'nhwc' for convs).  We tag nodes and count the reorders a real
+    materialization would need; reorders between adjacent nodes that agree are
+    elided (the minimization the paper describes)."""
+    prev_layout: Dict[int, str] = {}
+    reorders = 0
+    for n in g.topo():
+        if n.op in (OpKind.INPUT, OpKind.PARAM):
+            continue
+        want = backend.preferred_layout(n)
+        n.layout = want
+        for i in n.inputs:
+            have = prev_layout.get(id(i))
+            if have is not None and have != want:
+                reorders += 1
+        prev_layout[id(n)] = want
+    g.layout_reorders = reorders
+    return g
+
+
+# ----------------------------------------------------------------------------
+# pipeline
+# ----------------------------------------------------------------------------
+
+def run_pipeline(g: Graph, backend: "object",
+                 training: bool = False) -> Graph:
+    for n in g.topo():
+        if n.op is OpKind.DROPOUT:
+            n.attrs["training"] = training
+    g = simplify(g)
+    g = assign_modules(g)
+    g = form_fusion_groups(g)
+    g = assign_layouts(g, backend)
+    return g

@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, SyntheticTokenDataset, DataLoader,
+                       make_batch_shapes)
+
+__all__ = ["DataConfig", "SyntheticTokenDataset", "DataLoader",
+           "make_batch_shapes"]

@@ -1,0 +1,3 @@
+from . import sharding, steps, zero, compress
+
+__all__ = ["sharding", "steps", "zero", "compress"]

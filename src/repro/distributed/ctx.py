@@ -1,0 +1,62 @@
+"""Activation-sharding context: lets model code place GSPMD constraints
+without threading mesh objects through every layer.
+
+``constrain(x, ("dp", None, "model"))`` resolves logical axis names against
+the active mesh ("dp" → ("pod","data") when present), checks divisibility
+(falls back to None per-dim — same policy as the parameter rule engine),
+and applies ``jax.lax.with_sharding_constraint``.  Outside a context it is
+a no-op, so single-device tests and smoke runs never pay for it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = _mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(mesh: Mesh, name) -> Optional[Tuple[str, ...]]:
+    if name is None:
+        return None
+    if name == "dp":
+        axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        return axes or None
+    if isinstance(name, str):
+        return (name,) if name in mesh.axis_names else None
+    return tuple(a for a in name if a in mesh.axis_names) or None
+
+
+def constrain(x: jax.Array, spec: Sequence) -> jax.Array:
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    parts = []
+    for dim, name in zip(x.shape, spec):
+        axes = _resolve(mesh, name)
+        if axes is None:
+            parts.append(None)
+            continue
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        parts.append(axes if n > 0 and dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

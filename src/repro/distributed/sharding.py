@@ -1,0 +1,160 @@
+"""Sharding rule engine: TP/EP/SP/DP PartitionSpecs with divisibility
+fallbacks.
+
+Philosophy (the SOL layout pass, at mesh scale): every parameter / cache
+tensor is assigned a layout by *name + rank* rules, with hard divisibility
+guards — a dim is only sharded when its size divides the mesh axis, else the
+engine falls back (heads → head_dim → sequence → replicate).  This is what
+makes one rule table serve 10 architectures.
+
+Mesh axes: ``model`` (TP/EP/SP) and ``data`` (+ leading ``pod``) for DP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import backbone as B
+from ..models.config import ArchConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _div(size: int, n: int) -> bool:
+    return n > 0 and size % n == 0
+
+
+def shard_dim(mesh: Mesh, size: int, axes):
+    """axes if divisible else None (the engine's universal fallback)."""
+    return axes if _div(size, axis_size(mesh, axes)) else None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# 2-D weights sharded on the output (column-parallel)
+_COL = {"wq", "wk", "wv", "wg", "wu", "w_in", "w_gate", "ck", "cr",
+        "xwq", "xwk", "xwv", "w1", "wr"}
+# 2-D weights sharded on the input (row-parallel)
+_ROW = {"wo", "wd", "w_out", "cv", "xwo", "w2"}
+# 1-D tensors following a column-parallel output
+_COL_BIAS = {"bq", "bk", "bv", "b1", "conv_b", "lam"}
+_REPLICATED = {"gain", "bias", "bo", "b2", "router", "u", "w0",
+               "gn_gain", "gn_bias", "enc_pos"}
+
+
+def param_spec(mesh: Mesh, cfg: ArchConfig, path: Tuple[str, ...],
+               shape: Tuple[int, ...]) -> P:
+    name = path[-1]
+    stacked = path[0] == "macro"          # leading n_macro scan dim
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    m = "model"
+
+    def mk(*spec):
+        return P(*(lead + spec))
+
+    parent = path[-2] if len(path) >= 2 else ""
+    if parent == "moe" or (len(path) >= 2 and "moe" in path):
+        if name == "router":
+            return mk(None, None)
+        # experts (E, D, F) / (E, F, D): expert-parallel on model
+        return mk(shard_dim(mesh, body[0], m), None, None)
+    if name == "embed":
+        return P(shard_dim(mesh, shape[0], m), None)
+    if name == "lm_head":
+        return P(None, shard_dim(mesh, shape[1], m))
+    if name in _COL and len(body) == 2:
+        return mk(None, shard_dim(mesh, body[1], m))
+    if name in _ROW and len(body) == 2:
+        return mk(shard_dim(mesh, body[0], m), None)
+    if name == "conv_w":                   # (W, dr)
+        return mk(None, shard_dim(mesh, body[1], m))
+    if name in ("wa", "wx"):               # (dr, dr) RG-LRU gates
+        return mk(None, shard_dim(mesh, body[1], m))
+    if name in _COL_BIAS and len(body) == 1:
+        return mk(shard_dim(mesh, body[0], m))
+    if name.startswith("lora_") or name.startswith("mu_"):
+        return mk(*(None,) * len(body))
+    if name in _REPLICATED or len(body) == 1:
+        return mk(*(None,) * len(body))
+    return mk(*(None,) * len(body))
+
+
+def param_specs(mesh: Mesh, cfg: ArchConfig, params_tree) -> Any:
+    """PartitionSpec pytree matching a params(-shaped) pytree."""
+    def walk(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path)
+        return param_spec(mesh, cfg, names, tuple(leaf.shape))
+    return jax.tree_util.tree_map_with_path(walk, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, cfg: ArchConfig, batch_tree) -> Any:
+    dp = dp_axes(mesh)
+
+    def walk(path, leaf):
+        b = shard_dim(mesh, leaf.shape[0], dp)
+        return P(b, *(None,) * (len(leaf.shape) - 1))
+    return jax.tree_util.tree_map_with_path(walk, batch_tree)
+
+
+def cache_specs(mesh: Mesh, cfg: ArchConfig, cache_tree) -> Any:
+    """KV caches: batch on data; kv-heads on model when divisible, else
+    sequence-sharded (SP / flash-decoding); recurrent states: channels/heads
+    on model."""
+    dp = dp_axes(mesh)
+    m = "model"
+
+    def walk(path, leaf):
+        names = [p.key if hasattr(p, "key") else "" for p in path]
+        stacked = names and names[0] == "macro"
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        lead = (None,) if stacked else ()
+
+        def mk(*spec):
+            return P(*(lead + spec))
+
+        last = names[-1] if names else ""
+        bspec = shard_dim(mesh, shape[0], dp)
+        if last == "S":            # rwkv state (B, H, hd, hd)
+            return mk(bspec, shard_dim(mesh, shape[1], m), None, None)
+        if last == "h":            # rglru hidden (B, dr)
+            return mk(bspec, shard_dim(mesh, shape[1], m))
+        if last == "conv":         # (B, W-1, dr)
+            return mk(bspec, None, shard_dim(mesh, shape[2], m))
+        if last in ("last_x", "last_xc"):
+            return mk(bspec, None)
+        if len(shape) == 4:        # attention kv cache (B, S, KV, hd)
+            kv_ax = shard_dim(mesh, shape[2], m)
+            if kv_ax is not None:
+                return mk(bspec, None, kv_ax, None)
+            return mk(bspec, shard_dim(mesh, shape[1], m), None, None)
+        return mk(bspec, *(None,) * (len(shape) - 1))
+    return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

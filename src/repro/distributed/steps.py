@@ -1,0 +1,186 @@
+"""Distributed train / serve steps (pjit factories).
+
+``make_train_step``: value_and_grad over the backbone loss, optional
+microbatch grad-accumulation scan (keeps the per-layer reduce-scatter inside
+the scan so XLA's latency-hiding scheduler overlaps collectives with the
+next microbatch's compute), optional bf16 gradient compression across the
+DP axes, AdamW with ZeRO-sharded moments, donated state.
+
+``make_serve_steps``: prefill + single-token decode with donated KV caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import backbone as B
+from ..models.config import ArchConfig
+from ..optim import AdamWConfig, adamw_update, cosine_schedule, init_opt_state
+from . import compress as C
+from . import ctx
+from . import sharding as S
+from . import zero as Z
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    remat: bool = True
+    microbatch: int = 1               # grad-accumulation factor
+    grad_compression: str = "none"    # 'none' | 'bf16'
+    zero: bool = True                 # ZeRO-1 moment sharding
+    moment_dtype: str = "float32"
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    aux_weight: float = 0.01
+
+
+def make_train_state_specs(mesh: Mesh, cfg: ArchConfig, opts: StepOptions):
+    pshapes = B.param_specs(cfg)
+    pspecs = S.param_specs(mesh, cfg, pshapes)
+    if opts.zero:
+        ospecs = Z.zero_opt_specs(mesh, pspecs, pshapes)
+    else:
+        from ..optim import opt_state_specs
+        ospecs = opt_state_specs(pspecs)
+    return {"params": pspecs, "opt": ospecs, "step": P()}
+
+
+def init_train_state(cfg: ArchConfig, opts: StepOptions, key):
+    params = B.init_params(cfg, key)
+    ocfg = AdamWConfig(lr=opts.lr, moment_dtype=opts.moment_dtype)
+    return {"params": params, "opt": init_opt_state(params, ocfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(cfg: ArchConfig, opts: StepOptions):
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, opts),
+        jax.random.PRNGKey(0))
+
+
+def make_train_step(mesh: Mesh, cfg: ArchConfig, opts: StepOptions
+                    ) -> Callable:
+    ocfg = AdamWConfig(lr=opts.lr, moment_dtype=opts.moment_dtype)
+
+    def loss(params, batch):
+        return B.loss_fn(cfg, params, batch, remat=opts.remat,
+                         aux_weight=opts.aux_weight)
+
+    def train_step(state, batch):
+        with ctx.use_mesh(mesh):
+            return _train_step(state, batch)
+
+    def _train_step(state, batch):
+        params = state["params"]
+        if opts.microbatch > 1:
+            # split batch leading dim into microbatches and scan
+            def resh(x):
+                bsz = x.shape[0]
+                mb = opts.microbatch
+                return x.reshape(mb, bsz // mb, *x.shape[1:])
+            mbatch = jax.tree.map(resh, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, mb)
+                g = jax.tree.map(jnp.add, g_acc, g)
+                return (g, l_acc + l), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), metrics = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), mbatch)
+            grads = jax.tree.map(lambda g: g / opts.microbatch, grads)
+            lval = lsum / opts.microbatch
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+        else:
+            (lval, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+
+        grads = C.compress_grads(grads, opts.grad_compression)
+        grads = C.decompress_grads(grads, opts.grad_compression)
+        lr = cosine_schedule(state["step"], peak_lr=opts.lr,
+                             warmup=opts.warmup, total=opts.total_steps)
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"],
+                                               ocfg, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": lval, **metrics, **om, "lr": lr}
+        return new_state, out_metrics
+
+    state_specs = make_train_state_specs(mesh, cfg, opts)
+    bshapes = None  # batch specs are computed at call sites from shapes
+    return train_step, state_specs
+
+
+def jit_train_step(mesh: Mesh, cfg: ArchConfig, opts: StepOptions,
+                   batch_shapes) -> Tuple[Any, Any, Any]:
+    """Returns (jitted step, state_specs, batch_specs)."""
+    step_fn, state_specs = make_train_step(mesh, cfg, opts)
+    batch_specs = S.batch_specs(mesh, cfg, batch_shapes)
+    metric_specs = None
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(S.named(mesh, state_specs),
+                      S.named(mesh, batch_specs)),
+        out_shardings=(S.named(mesh, state_specs), None),
+        donate_argnums=(0,),
+    )
+    return jitted, state_specs, batch_specs
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(mesh: Mesh, cfg: ArchConfig):
+    def prefill_step(params, batch):
+        with ctx.use_mesh(mesh):
+            logits, _ = B.prefill(cfg, params, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(mesh: Mesh, cfg: ArchConfig):
+    def decode(params, cache, tokens, pos, enc_out=None):
+        with ctx.use_mesh(mesh):
+            if cfg.enc_dec is not None:
+                return B.decode_step(cfg, params, cache, tokens, pos,
+                                     enc_out=enc_out)
+            return B.decode_step(cfg, params, cache, tokens, pos)
+
+    return decode
+
+
+def jit_serve_steps(mesh: Mesh, cfg: ArchConfig, batch: int, max_seq: int,
+                    prefill_shapes=None):
+    pshapes = B.param_specs(cfg)
+    pspecs = S.param_specs(mesh, cfg, pshapes)
+    cshapes = B.cache_specs(cfg, batch, max_seq)
+    cspecs = S.cache_specs(mesh, cfg, cshapes)
+    dp = S.dp_axes(mesh)
+    tok_spec = P(S.shard_dim(mesh, batch, dp), None)
+
+    decode = make_decode_step(mesh, cfg)
+    args_shard = [S.named(mesh, pspecs), S.named(mesh, cspecs),
+                  NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())]
+    if cfg.enc_dec is not None:
+        enc_spec = P(S.shard_dim(mesh, batch, dp), None, None)
+        args_shard.append(NamedSharding(mesh, enc_spec))
+    jitted_decode = jax.jit(
+        decode,
+        in_shardings=tuple(args_shard),
+        out_shardings=(NamedSharding(mesh, P(S.shard_dim(mesh, batch, dp),
+                                             None, "model")),
+                       S.named(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return jitted_decode, pspecs, cspecs

@@ -1,0 +1,40 @@
+"""ZeRO-1: shard optimizer moments over the data-parallel axes on top of TP.
+
+For each moment tensor we find the largest dim not already model-sharded
+whose size divides the DP world, and add the DP axes there.  Under GSPMD
+this turns the weight-update into reduce-scatter(grad) → sharded update →
+all-gather(param), which XLA emits automatically from the sharding
+annotations — the standard ZeRO-1 dataflow."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .sharding import axis_size, dp_axes
+
+
+def zero_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    dp = dp_axes(mesh)
+    n = axis_size(mesh, dp)
+    if n <= 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    # choose the largest unsharded, divisible dim
+    best, best_size = -1, 0
+    for i, (s, dim) in enumerate(zip(parts, shape)):
+        if s is None and dim % n == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best < 0:
+        return spec
+    parts[best] = dp if len(dp) > 1 else dp[0]
+    return P(*parts)
+
+
+def zero_opt_specs(mesh: Mesh, param_spec_tree, params_shape_tree) -> Any:
+    def walk(spec, shaped):
+        return zero_spec(mesh, spec, tuple(shaped.shape))
+    moment = jax.tree.map(walk, param_spec_tree, params_shape_tree,
+                          is_leaf=lambda x: isinstance(x, P))
+    return {"m": moment, "v": moment, "step": P()}

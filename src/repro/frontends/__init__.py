@@ -1,0 +1,5 @@
+from . import nn, extract, offload, deploy
+from .optimize import optimize, SolModel
+from .offload import device as device_api
+
+__all__ = ["nn", "extract", "offload", "deploy", "optimize", "SolModel"]

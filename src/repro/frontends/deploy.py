@@ -1,0 +1,70 @@
+"""sol.deploy — deployment mode (paper Sec. III-C): extract the NN into a
+framework-free artifact.
+
+JAX analogue: AOT-export the optimized whole-graph executable via
+``jax.export`` (StableHLO bytes + a tiny loader) — the artifact depends on
+neither the frontend module system nor the SOL compiler, mirroring the
+paper's 'minimalistic library without framework or SOL dependencies'."""
+from __future__ import annotations
+
+import io
+import json
+import zipfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import export as jexport
+
+from .optimize import SolModel
+
+
+def deploy(sol_model: SolModel, input_shape: Tuple[int, ...],
+           dtype=jnp.float32) -> bytes:
+    """Serialize (weights + compiled graph) into a single artifact."""
+    params = sol_model._params_for_call()
+    x_spec = jax.ShapeDtypeStruct(input_shape, dtype)
+    p_spec = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    exp = jexport.export(jax.jit(sol_model._fn))(p_spec, x_spec)
+    blob = exp.serialize()
+
+    buf = io.BytesIO()
+    with zipfile.ZipFile(buf, "w") as z:
+        z.writestr("graph.stablehlo", blob)
+        manifest = {"params": {}}
+        for k, v in params.items():
+            arr = np.asarray(v)
+            manifest["params"][k] = {"shape": list(arr.shape),
+                                     "dtype": str(arr.dtype)}
+            z.writestr(f"params/{k}.npy", _npy_bytes(arr))
+        z.writestr("manifest.json", json.dumps(manifest))
+    return buf.getvalue()
+
+
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    b = io.BytesIO()
+    np.save(b, arr)
+    return b.getvalue()
+
+
+class DeployedModel:
+    """Loader for the artifact — no SOL / frontend imports needed beyond
+    jax itself."""
+
+    def __init__(self, blob: bytes):
+        z = zipfile.ZipFile(io.BytesIO(blob))
+        exp = jexport.deserialize(z.read("graph.stablehlo"))
+        manifest = json.loads(z.read("manifest.json"))
+        self.params = {
+            k: np.load(io.BytesIO(z.read(f"params/{k}.npy")))
+            for k in manifest["params"]}
+        self._call = exp.call
+
+    def __call__(self, x) -> Any:
+        return self._call(self.params, x)
+
+
+def load(blob: bytes) -> DeployedModel:
+    return DeployedModel(blob)

@@ -1,0 +1,109 @@
+"""Graph extraction: framework modules → SOL IR (paper Sec. III-A,
+'extracts the computation graph from the framework').
+
+Walks the module tree structurally (the torch.jit-trace analogue) and emits
+one IR node per layer, with parameters registered under their framework
+dotted names so the SolModel can keep sharing the framework's parameter
+storage (paper Listing 2: 'param_0 = ... managed by framework')."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core import ir
+from ..core.ir import Graph, Node, OpKind, TensorSpec
+from . import nn
+
+
+def _out_shape_conv(x: Tuple[int, ...], m: nn.Conv2d) -> Tuple[int, ...]:
+    a = m.attrs
+    h = (x[2] + 2 * a["padding"] - a["kernel"]) // a["stride"] + 1
+    w = (x[3] + 2 * a["padding"] - a["kernel"]) // a["stride"] + 1
+    return (x[0], a["out_ch"], h, w)
+
+
+def _out_shape_pool(x: Tuple[int, ...], k: int, s: int) -> Tuple[int, ...]:
+    return (x[0], x[1], (x[2] - k) // s + 1, (x[3] - k) // s + 1)
+
+
+def extract(model: nn.Sequential, input_shape: Tuple[int, ...],
+            dtype: str = "float32") -> Graph:
+    if not isinstance(model, nn.Sequential):
+        raise TypeError("extraction currently covers Sequential models "
+                        "(the paper's CNN/MLP scope)")
+    dims = ir.NCHW() if len(input_shape) == 4 else ir.NF()
+    x = ir.input_node(input_shape, dtype, dims, name="input")
+    params: Dict[str, Node] = {}
+    cur = x
+    shape = tuple(input_shape)
+
+    def param(name: str, arr) -> Node:
+        n = ir.param_node(tuple(arr.shape), dtype, name=name)
+        params[name] = n
+        return n
+
+    for idx, m in enumerate(model):
+        pfx = f"{idx}."
+        if isinstance(m, nn.Linear):
+            w = param(pfx + "weight", m._params["weight"])
+            ins = [cur, w]
+            shape = shape[:-1] + (m.out_features,)
+            cur = Node(OpKind.LINEAR, ins, TensorSpec(shape, dtype),
+                       attrs={"out_features": m.out_features})
+            if m.has_bias:
+                b = param(pfx + "bias", m._params["bias"])
+                cur = Node(OpKind.BIAS_ADD, [cur, b],
+                           TensorSpec(shape, dtype), attrs={"axis": -1})
+        elif isinstance(m, nn.Conv2d):
+            w = param(pfx + "weight", m._params["weight"])
+            shape = _out_shape_conv(shape, m)
+            cur = Node(OpKind.CONV2D, [cur, w], TensorSpec(shape, dtype),
+                       attrs={"stride": m.attrs["stride"],
+                              "padding": m.attrs["padding"],
+                              "groups": m.attrs["groups"],
+                              "out_channels": m.attrs["out_ch"]})
+            if m.has_bias:
+                b = param(pfx + "bias", m._params["bias"])
+                cur = Node(OpKind.BIAS_ADD, [cur, b],
+                           TensorSpec(shape, dtype), attrs={"axis": 1})
+        elif isinstance(m, nn.ReLU):
+            cur = Node(OpKind.RELU, [cur], TensorSpec(shape, dtype))
+        elif isinstance(m, nn.GELU):
+            cur = Node(OpKind.GELU, [cur], TensorSpec(shape, dtype))
+        elif isinstance(m, nn.MaxPool2d):
+            shape = _out_shape_pool(shape, m.kernel, m.stride)
+            cur = Node(OpKind.MAXPOOL, [cur], TensorSpec(shape, dtype),
+                       attrs={"kernel": m.kernel, "stride": m.stride})
+        elif isinstance(m, nn.AvgPool2d):
+            shape = _out_shape_pool(shape, m.kernel, m.stride)
+            cur = Node(OpKind.AVGPOOL, [cur], TensorSpec(shape, dtype),
+                       attrs={"kernel": m.kernel, "stride": m.stride})
+        elif isinstance(m, nn.GlobalAvgPool):
+            shape = shape[:2]
+            cur = Node(OpKind.GLOBALPOOL, [cur], TensorSpec(shape, dtype))
+        elif isinstance(m, nn.Flatten):
+            flat = 1
+            for s in shape[1:]:
+                flat *= s
+            shape = (shape[0], flat)
+            cur = Node(OpKind.FLATTEN, [cur], TensorSpec(shape, dtype))
+        elif isinstance(m, nn.LayerNorm):
+            g = param(pfx + "weight", m._params["weight"])
+            b = param(pfx + "bias", m._params["bias"])
+            cur = Node(OpKind.LAYERNORM, [cur, g, b],
+                       TensorSpec(shape, dtype))
+        elif isinstance(m, nn.BatchNorm2d):
+            ps = [param(pfx + n, m._params[n]) for n in
+                  ("weight", "bias", "running_mean", "running_var")]
+            cur = Node(OpKind.BATCHNORM, [cur] + ps, TensorSpec(shape, dtype))
+        elif isinstance(m, nn.Dropout):
+            cur = Node(OpKind.DROPOUT, [cur], TensorSpec(shape, dtype),
+                       attrs={"p": m.p})
+        elif isinstance(m, nn.Sequential):
+            raise TypeError("nested Sequential: flatten before extraction")
+        else:
+            raise TypeError(f"unsupported layer for extraction: {type(m)}")
+    g = Graph(inputs=[x], outputs=[cur], params=params)
+    g.validate()
+    return g

@@ -1,0 +1,335 @@
+"""The 'AI framework' stand-in (paper's PyTorch role).
+
+A deliberately torch-like eager module system: each layer executes as its
+own jit-compiled call (op-at-a-time dispatch — the same execution model
+that makes eager PyTorch leave fusion opportunities on the table).  SOL
+extracts the graph from these modules (extract.py), optimizes it, and
+injects a SolModel back (optimize.py) — without touching this file: the
+framework's source code never changes, which is the paper's whole point.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class Module:
+    """Eager module: owns parameters (host-visible), executes op-by-op."""
+
+    def __init__(self):
+        self._params: Dict[str, Array] = {}
+        self._children: Dict[str, "Module"] = {}
+        self.training = False
+        self._version = 0           # bumped on parameter mutation
+
+    # -- parameter plumbing ---------------------------------------------------
+    def register(self, name: str, value: Array) -> None:
+        self._params[name] = value
+
+    def add_module(self, name: str, mod: "Module") -> None:
+        self._children[name] = mod
+
+    def named_parameters(self, prefix: str = "") -> Dict[str, Array]:
+        out = {prefix + k: v for k, v in self._params.items()}
+        for n, c in self._children.items():
+            out.update(c.named_parameters(prefix + n + "."))
+        return out
+
+    def load_state_dict(self, sd: Dict[str, Array]) -> None:
+        for k, v in sd.items():
+            self._set_param(k, v)
+        self.bump_version()
+
+    def state_dict(self) -> Dict[str, Array]:
+        return self.named_parameters()
+
+    def _set_param(self, dotted: str, value: Array) -> None:
+        parts = dotted.split(".")
+        mod: Module = self
+        for p in parts[:-1]:
+            mod = mod._children[p]
+        mod._params[parts[-1]] = value
+
+    def bump_version(self) -> None:
+        self._version += 1
+        for c in self._children.values():
+            c.bump_version()
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def train(self, mode: bool = True) -> "Module":
+        self.training = mode
+        for c in self._children.values():
+            c.train(mode)
+        return self
+
+    def eval(self) -> "Module":
+        return self.train(False)
+
+    def __call__(self, x: Array) -> Array:
+        return self.forward(x)
+
+    def forward(self, x: Array) -> Array:    # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+def _kaiming(key, shape, fan_in):
+    return jax.random.normal(key, shape) * math.sqrt(2.0 / fan_in)
+
+
+_key_counter = [0]
+
+
+def _next_key():
+    _key_counter[0] += 1
+    return jax.random.PRNGKey(_key_counter[0])
+
+
+class Linear(Module):
+    def __init__(self, in_features: int, out_features: int,
+                 bias: bool = True):
+        super().__init__()
+        self.in_features = in_features
+        self.out_features = out_features
+        # framework-native layout: (out, in) — torch convention; SOL's
+        # layout pass may elect (in, out) per backend
+        self.register("weight", _kaiming(_next_key(),
+                                         (out_features, in_features),
+                                         in_features))
+        self.has_bias = bias
+        if bias:
+            self.register("bias", jnp.zeros((out_features,)))
+
+    def forward(self, x: Array) -> Array:
+        y = _eager_linear(x, self._params["weight"])
+        if self.has_bias:
+            y = _eager_add_vec(y, self._params["bias"])
+        return y
+
+
+class Conv2d(Module):
+    def __init__(self, in_ch: int, out_ch: int, kernel: int, stride: int = 1,
+                 padding: int = 0, groups: int = 1, bias: bool = True):
+        super().__init__()
+        self.attrs = dict(in_ch=in_ch, out_ch=out_ch, kernel=kernel,
+                          stride=stride, padding=padding, groups=groups)
+        fan_in = in_ch // groups * kernel * kernel
+        self.register("weight", _kaiming(
+            _next_key(), (out_ch, in_ch // groups, kernel, kernel), fan_in))
+        self.has_bias = bias
+        if bias:
+            self.register("bias", jnp.zeros((out_ch,)))
+
+    def forward(self, x: Array) -> Array:
+        a = self.attrs
+        y = _eager_conv(x, self._params["weight"], a["stride"],
+                        a["padding"], a["groups"])
+        if self.has_bias:
+            y = _eager_add_chan(y, self._params["bias"])
+        return y
+
+
+class ReLU(Module):
+    def forward(self, x: Array) -> Array:
+        return _eager_relu(x)
+
+
+class GELU(Module):
+    def forward(self, x: Array) -> Array:
+        return _eager_gelu(x)
+
+
+class MaxPool2d(Module):
+    def __init__(self, kernel: int, stride: Optional[int] = None):
+        super().__init__()
+        self.kernel = kernel
+        self.stride = stride or kernel
+
+    def forward(self, x: Array) -> Array:
+        return _eager_maxpool(x, self.kernel, self.stride)
+
+
+class AvgPool2d(Module):
+    def __init__(self, kernel: int, stride: Optional[int] = None):
+        super().__init__()
+        self.kernel = kernel
+        self.stride = stride or kernel
+
+    def forward(self, x: Array) -> Array:
+        return _eager_avgpool(x, self.kernel, self.stride)
+
+
+class GlobalAvgPool(Module):
+    def forward(self, x: Array) -> Array:
+        return _eager_globalpool(x)
+
+
+class Flatten(Module):
+    def forward(self, x: Array) -> Array:
+        return x.reshape(x.shape[0], -1)
+
+
+class LayerNorm(Module):
+    def __init__(self, dim: int):
+        super().__init__()
+        self.dim = dim
+        self.register("weight", jnp.ones((dim,)))
+        self.register("bias", jnp.zeros((dim,)))
+
+    def forward(self, x: Array) -> Array:
+        return _eager_layernorm(x, self._params["weight"],
+                                self._params["bias"])
+
+
+class BatchNorm2d(Module):
+    def __init__(self, ch: int):
+        super().__init__()
+        self.ch = ch
+        self.register("weight", jnp.ones((ch,)))
+        self.register("bias", jnp.zeros((ch,)))
+        self.register("running_mean", jnp.zeros((ch,)))
+        self.register("running_var", jnp.ones((ch,)))
+
+    def forward(self, x: Array) -> Array:
+        p = self._params
+        return _eager_batchnorm(x, p["weight"], p["bias"],
+                                p["running_mean"], p["running_var"])
+
+
+class Dropout(Module):
+    def __init__(self, p: float = 0.1):
+        super().__init__()
+        self.p = p
+
+    def forward(self, x: Array) -> Array:
+        return x                     # inference identity (eager reference)
+
+
+class Sequential(Module):
+    def __init__(self, *mods: Module):
+        super().__init__()
+        self.mods = list(mods)
+        for i, m in enumerate(mods):
+            self.add_module(str(i), m)
+
+    def forward(self, x: Array) -> Array:
+        for m in self.mods:
+            x = m(x)
+        return x
+
+    def __iter__(self):
+        return iter(self.mods)
+
+
+# -- eager op-at-a-time kernels (each a separate jit = dispatch per layer) ----
+
+@jax.jit
+def _eager_linear(x, w):
+    return x @ w.T
+
+
+@jax.jit
+def _eager_add_vec(x, b):
+    return x + b
+
+
+@jax.jit
+def _eager_add_chan(x, b):
+    return x + b[None, :, None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "groups"))
+def _eager_conv(x, w, stride, padding, groups):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), ((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups)
+
+
+@jax.jit
+def _eager_relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+@jax.jit
+def _eager_gelu(x):
+    return jax.nn.gelu(x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "s"))
+def _eager_maxpool(x, k, s):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, k, k), (1, 1, s, s), "VALID")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "s"))
+def _eager_avgpool(x, k, s):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add,
+                                 (1, 1, k, k), (1, 1, s, s), "VALID") / (k * k)
+
+
+@jax.jit
+def _eager_globalpool(x):
+    return x.mean(axis=(2, 3))
+
+
+@jax.jit
+def _eager_layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+@jax.jit
+def _eager_batchnorm(x, g, b, m, v):
+    inv = jax.lax.rsqrt(v + 1e-5) * g
+    return (x - m[None, :, None, None]) * inv[None, :, None, None] \
+        + b[None, :, None, None]
+
+
+# -- model zoo (paper benchmarks: MLP + CNNs) ---------------------------------
+
+def mlp_8192(n_layers: int = 3, features: int = 8192,
+             in_features: int = 8192, classes: int = 1000) -> Sequential:
+    """The paper's MLP: 3 layers, 8192 features, ReLU."""
+    mods: List[Module] = []
+    d = in_features
+    for _ in range(n_layers - 1):
+        mods += [Linear(d, features), ReLU()]
+        d = features
+    mods.append(Linear(d, classes))
+    return Sequential(*mods)
+
+
+def small_cnn(in_ch: int = 3, classes: int = 10) -> Sequential:
+    """VGG-flavoured small CNN (conv-relu-pool blocks → MLP head)."""
+    return Sequential(
+        Conv2d(in_ch, 32, 3, padding=1), ReLU(), MaxPool2d(2),
+        Conv2d(32, 64, 3, padding=1), ReLU(), MaxPool2d(2),
+        Conv2d(64, 128, 3, padding=1), BatchNorm2d(128), ReLU(),
+        GlobalAvgPool(), Flatten(),
+        Linear(128, 256), ReLU(), Dropout(0.1),
+        Linear(256, classes),
+    )
+
+
+def depthwise_cnn(in_ch: int = 3, classes: int = 10) -> Sequential:
+    """MobileNet-flavoured: depthwise convs (groups == channels) — the
+    paper's special case that routes to the DFP module as WeightedPooling."""
+    return Sequential(
+        Conv2d(in_ch, 32, 3, padding=1), ReLU(),
+        Conv2d(32, 32, 3, padding=1, groups=32, bias=False),   # depthwise
+        Conv2d(32, 64, 1), ReLU(), MaxPool2d(2),
+        Conv2d(64, 64, 3, padding=1, groups=64, bias=False),   # depthwise
+        Conv2d(64, 128, 1), ReLU(),
+        GlobalAvgPool(), Flatten(), Linear(128, classes),
+    )

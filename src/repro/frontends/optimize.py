@@ -1,0 +1,77 @@
+"""sol.optimize — the paper's user-facing entry point (Listing 1):
+
+    sol_model = sol.optimize(py_model, input_shape)
+    sol_model.load_state_dict(py_model.state_dict())
+    y = sol_model(x)
+
+The returned SolModel behaves like a framework module (Listing 2): its
+parameters stay *framework-managed* (shared storage, version-tracked) while
+forward executes SOL's optimized, whole-graph-compiled code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..backends import get_backend
+from ..core import passes
+from ..core.executor import lower_graph
+from . import nn
+from .extract import extract
+from .offload import device as device_api
+
+
+class SolModel(nn.Module):
+    """The custom model SOL injects into the framework (paper Listing 2)."""
+
+    def __init__(self, source: nn.Module, graph, backend, fn):
+        super().__init__()
+        self._source = source
+        self.graph = graph
+        self.backend = backend
+        self._fn = fn                      # jit'd whole-graph executable
+        self._ctx_version = -1
+        self._ctx_params: Optional[Dict[str, Any]] = None
+
+    def _params_for_call(self) -> Dict[str, Any]:
+        """Offloading context: parameters are cached on the target device and
+        re-staged only when the framework-side values change (version bump) —
+        the paper's context-caching that limits host↔device memcopies to
+        input/output (Sec. V-A)."""
+        v = (self._source.version, device_api.state)
+        if self._ctx_params is None or self._ctx_version != v:
+            sd = self._source.state_dict()
+            self._ctx_params = device_api.stage_params(
+                {k: sd[k] for k in self.graph.params})
+            self._ctx_version = v
+        return self._ctx_params
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        self._source.load_state_dict(sd)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return self._source.state_dict()
+
+    def forward(self, x) -> Any:
+        params = self._params_for_call()
+        x = device_api.stage_input(x)
+        y = self._fn(params, x)
+        return device_api.fetch_output(y)
+
+    def stats(self) -> Dict[str, int]:
+        return self.graph.stats()
+
+
+def optimize(model: nn.Module, input_shape: Tuple[int, ...], *,
+             backend: str = "xla", training: bool = False,
+             dtype: str = "float32") -> SolModel:
+    """Extract → optimize → codegen → inject.  ≤1 line for the user."""
+    bk = get_backend(backend)
+    graph = extract(model, input_shape, dtype)
+    graph = passes.run_pipeline(graph, bk, training=training)
+    raw_fn = lower_graph(graph, bk)
+    fn = jax.jit(raw_fn)
+    return SolModel(model, graph, bk, fn)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for SOL's perf-critical compute layers.
+
+The paper's DFP module generates fused depth-first kernels — these are the
+TPU-native equivalents.  Each kernel is a subpackage:
+
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True validates on CPU)
+  ref.py    — pure-jnp oracle used by the allclose tests
+"""

@@ -1,0 +1,3 @@
+from .ops import avgpool
+
+__all__ = ["avgpool"]

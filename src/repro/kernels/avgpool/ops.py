@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import avgpool_call
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "interpret"))
+def avgpool(x: jax.Array, kh: int = 3, kw: int = 3, *,
+            interpret: bool = False) -> jax.Array:
+    """Paper Listing-3 AveragePooling (NCHW, stride 1, VALID)."""
+    return avgpool_call(x, kh, kw, interpret=interpret)

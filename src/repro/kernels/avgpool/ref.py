@@ -1,0 +1,12 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def avgpool_ref(x: jax.Array, kh: int = 3, kw: int = 3) -> jax.Array:
+    s = jax.lax.reduce_window(
+        x.astype(jnp.float32), 0.0, jax.lax.add,
+        window_dimensions=(1, 1, kh, kw), window_strides=(1, 1, 1, 1),
+        padding="VALID")
+    return (s / (kh * kw)).astype(x.dtype)

@@ -1,0 +1,4 @@
+from .ops import dfp_fused
+from .program import encode_program, Instr
+
+__all__ = ["dfp_fused", "encode_program", "Instr"]

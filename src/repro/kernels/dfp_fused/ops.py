@@ -1,0 +1,21 @@
+"""Public wrapper for the DFP fused kernel."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from .kernel import dfp_fused_call
+from .program import Program
+
+
+def dfp_fused(prog: Program, operands: Sequence[jax.Array],
+              interpret: bool = False) -> jax.Array:
+    # chain output shape == shape of the first 'full' operand
+    full = [o for o, k in zip(operands, prog.operand_kinds) if k == "full"]
+    if not full:
+        raise ValueError("dfp_fused needs at least one full-shape operand")
+    out_shape = tuple(full[0].shape)
+    out_dtype = full[0].dtype
+    return dfp_fused_call(prog, list(operands), out_shape, out_dtype,
+                          interpret=interpret)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the DFP fused kernel: interprets the same static
+program on whole arrays (no tiling), used by the allclose tests."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .program import Program
+
+
+def dfp_fused_ref(prog: Program, operands: Sequence[jax.Array],
+                  out_shape, out_dtype) -> jax.Array:
+    d = out_shape[-1]
+    rows = 1
+    for s in out_shape[:-1]:
+        rows *= s
+    vals = {}
+    for i, (op, kind) in enumerate(zip(operands, prog.operand_kinds)):
+        vals[i] = op.reshape(rows, d) if kind == "full" else op.reshape(1, d)
+
+    regs = {}
+
+    def val(src):
+        tag, i = src
+        return regs[i] if tag == "reg" else vals[i]
+
+    for ins in prog.instrs:
+        op, dst = ins[0], ins[1]
+        if op == "relu":
+            r = jnp.maximum(val(ins[2]), 0.0)
+        elif op == "gelu":
+            r = jax.nn.gelu(val(ins[2]))
+        elif op == "silu":
+            r = jax.nn.silu(val(ins[2]))
+        elif op == "sigmoid":
+            r = jax.nn.sigmoid(val(ins[2]))
+        elif op == "tanh":
+            r = jnp.tanh(val(ins[2]))
+        elif op == "exp":
+            r = jnp.exp(val(ins[2]))
+        elif op == "copy":
+            r = val(ins[2])
+        elif op == "add":
+            r = val(ins[2]) + val(ins[3])
+        elif op == "sub":
+            r = val(ins[2]) - val(ins[3])
+        elif op == "mul":
+            r = val(ins[2]) * val(ins[3])
+        elif op == "div":
+            r = val(ins[2]) / val(ins[3])
+        elif op == "scale":
+            r = val(ins[2]) * ins[3]
+        elif op == "softcap":
+            r = jnp.tanh(val(ins[2]) / ins[3]) * ins[3]
+        elif op == "bias":
+            r = val(ins[2]) + vals[ins[3]]
+        elif op == "rmsnorm":
+            x = val(ins[2]).astype(jnp.float32)
+            ms = jnp.mean(x * x, axis=-1, keepdims=True)
+            r = (x * jax.lax.rsqrt(ms + ins[4])).astype(val(ins[2]).dtype) \
+                * vals[ins[3]]
+        elif op == "layernorm":
+            x = val(ins[2]).astype(jnp.float32)
+            mu = jnp.mean(x, axis=-1, keepdims=True)
+            var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+            xn = (x - mu) * jax.lax.rsqrt(var + ins[5])
+            r = xn.astype(val(ins[2]).dtype) * vals[ins[3]] + vals[ins[4]]
+        else:  # pragma: no cover
+            raise NotImplementedError(op)
+        regs[dst] = r
+    return regs[prog.out_reg].reshape(out_shape).astype(out_dtype)

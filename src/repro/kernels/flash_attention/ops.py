@@ -1,0 +1,24 @@
+"""Public wrapper: accepts model-layout (B, S, H, hd) tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_call
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, cap: float = 0.0,
+                    bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) → (B, S, H, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_call(qt, kt, vt, causal=causal, window=window,
+                             cap=cap, bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

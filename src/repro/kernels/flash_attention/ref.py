@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: direct masked-softmax GQA attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        cap: float = 0.0) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                        k.astype(jnp.float32)) * scale
+    if cap:
+        logits = jnp.tanh(logits / cap) * cap
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window:
+        mask &= pos[:, None] - pos[None, :] < window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(b, h, s, hd).astype(q.dtype)

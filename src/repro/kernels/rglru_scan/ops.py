@@ -1,0 +1,15 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rglru_scan_call
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+               bd: int = 512, interpret: bool = False):
+    """Gated linear recurrence h_t = a_t·h_{t-1} + b_t.
+    a, b: (B, T, D); h0: (B, D) → (h: (B,T,D), h_last: (B,D))."""
+    return rglru_scan_call(a, b, h0, bd=bd, interpret=interpret)

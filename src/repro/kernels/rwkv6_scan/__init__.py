@@ -1,0 +1,3 @@
+from .ops import rwkv6_scan
+
+__all__ = ["rwkv6_scan"]

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rwkv6_scan_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_scan(r, k, v, logw, u, s0, *, interpret: bool = False):
+    """RWKV6 WKV recurrence.  r,k,v,logw: (B,T,H,hd); u: (H,hd);
+    s0: (B,H,hd,hd) → (o: (B,T,H,hd), s_last)."""
+    return rwkv6_scan_call(r, k, v, logw, u, s0, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Oracle: per-step jnp recurrence (the O(1)-state decode form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    """Same contract as rwkv6_scan: r,k,v,logw (B,T,H,hd); u (H,hd);
+    s0 (B,H,hd,hd) → (o, s_last)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for x in (r, k, v, logw))     # (T,B,H,hd)
+    uf = u.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = ((s + uf[None, :, :, None] * kv) * rt[..., :, None]).sum(axis=-2)
+        s = jnp.exp(wt)[..., :, None] * s + kv
+        return s, o
+
+    s_last, o = jax.lax.scan(step, s0.astype(jnp.float32), (rf, kf, vf, wf))
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), s_last

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh 1pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are appended incrementally to ``results/dryrun.jsonl``; completed
+cells are skipped on rerun (delete the file to redo).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, ALIASES, get_config
+from ..distributed import sharding as S
+from ..distributed.steps import (StepOptions, jit_serve_steps,
+                                 make_train_step, train_state_shapes)
+from ..models import backbone as B
+from ..models.config import SHAPES
+from . import specs as SP
+from .mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.jsonl"
+
+# per-arch training options: the big models need ZeRO + bf16 moments +
+# remat to fit 16 GB/chip; bf16 gradient compression halves cross-pod traffic
+TRAIN_OPTS = {
+    # NOTE: microbatch>1 was tried for the big models and REFUTED on the
+    # lowered IR: XLA re-runs the weight-gradient all-reduce and the expert
+    # weight staging every microbatch (kimi collective 45s → 112s).  See
+    # EXPERIMENTS.md §Perf moe-6.
+    "kimi-k2-1t-a32b": StepOptions(remat=True, zero=True,
+                                   moment_dtype="bfloat16",
+                                   grad_compression="bf16"),
+    "command-r-plus-104b": StepOptions(remat=True, zero=True,
+                                       moment_dtype="bfloat16",
+                                       grad_compression="bf16"),
+    "internvl2-26b": StepOptions(remat=True, zero=True,
+                                 moment_dtype="float32"),
+}
+DEFAULT_OPTS = StepOptions(remat=True, zero=True)
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\](?:, \w+\[[^\]]*\])*)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*%?\S+ = (\S+) (all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of an HLO type string like 'bf16[256,1024]{1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, n_devices: int):
+    """Scan optimized HLO for collectives; return per-kind result-bytes,
+    op counts, and ring-model per-device ICI byte estimates."""
+    kinds = {}
+    ici_bytes = 0.0
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        g = n_devices
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            im = _IOTA_RE.search(line)
+            if im:
+                g = int(im.group(2))
+        g = max(g, 1)
+        d = kinds.setdefault(kind, {"count": 0, "bytes": 0, "ici_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += size
+        if kind == "all-gather":
+            t = size * (g - 1) / g
+        elif kind == "all-reduce":
+            t = 2.0 * size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            t = size * (g - 1)          # result is the scattered shard
+        elif kind == "all-to-all":
+            t = size * (g - 1) / g
+        else:                            # collective-permute
+            t = float(size)
+        d["ici_bytes"] += t
+        ici_bytes += t
+    return kinds, ici_bytes
+
+
+def memory_summary(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opts = TRAIN_OPTS.get(cfg.name, DEFAULT_OPTS)
+
+    if shape.kind == "train":
+        step_fn, state_specs = make_train_step(mesh, cfg, opts)
+        state_shapes = train_state_shapes(cfg, opts)
+        batch_shapes = SP.train_batch_specs(cfg, shape)
+        batch_specs = S.batch_specs(mesh, cfg, batch_shapes)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(S.named(mesh, state_specs),
+                                       S.named(mesh, batch_specs)),
+                         out_shardings=(S.named(mesh, state_specs), None),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        pshapes = B.param_specs(cfg)
+        pspecs = S.param_specs(mesh, cfg, pshapes)
+        batch_shapes = SP.prefill_batch_specs(cfg, shape)
+        batch_specs = S.batch_specs(mesh, cfg, batch_shapes)
+        dp = S.dp_axes(mesh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        out_spec = NamedSharding(mesh, P(
+            S.shard_dim(mesh, shape.global_batch, dp), None, "model"))
+
+        from ..distributed import ctx
+
+        def prefill_fn(params, batch):
+            with ctx.use_mesh(mesh):
+                logits, _ = B.prefill(cfg, params, batch)
+            return logits
+
+        jitted = jax.jit(prefill_fn,
+                         in_shardings=(S.named(mesh, pspecs),
+                                       S.named(mesh, batch_specs)),
+                         out_shardings=out_spec)
+        with mesh:
+            lowered = jitted.lower(pshapes, batch_shapes)
+    else:  # decode
+        pshapes = B.param_specs(cfg)
+        jitted_decode, pspecs, cspecs = jit_serve_steps(
+            mesh, cfg, shape.global_batch, shape.seq_len)
+        cache, tokens, pos, enc_out = SP.decode_input_specs(cfg, shape)
+        args = [pshapes, cache, tokens, pos]
+        if enc_out is not None:
+            args.append(enc_out)
+        with mesh:
+            lowered = jitted_decode.lower(*args)
+    return lowered, mesh, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, results_path: Path):
+    multi_pod = mesh_name == "2pod"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = SP.cell_is_applicable(cfg, shape)
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _append(results_path, rec)
+        print(f"[dryrun] SKIP {cfg.name} × {shape_name} × {mesh_name}: {why}")
+        return rec
+
+    t0 = time.time()
+    try:
+        lowered, mesh, cfg, shape = lower_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        mem = memory_summary(compiled)
+        n_dev = mesh.devices.size
+        text = compiled.as_text()
+        from . import hlo_analysis as HA
+        loop_aware = HA.analyze(text, n_dev)
+        rec.update(
+            status="ok",
+            n_devices=int(n_dev),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            # loop-aware accounting (while bodies × trip count) — the
+            # numbers the roofline uses
+            flops_per_device=float(loop_aware["flops_per_device"]),
+            hbm_bytes_per_device=float(loop_aware["hbm_bytes_per_device"]),
+            ici_bytes_per_device=float(loop_aware["ici_bytes_per_device"]),
+            collectives=loop_aware["collectives"],
+            loops=loop_aware["loops"],
+            # XLA's builtin (loop bodies counted once) for reference
+            xla_flops_per_device=float(cost.get("flops", 0.0)),
+            xla_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            memory=mem,
+            hlo_len=len(text),
+        )
+        print(f"[dryrun] OK {cfg.name} × {shape_name} × {mesh_name}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"flops/dev {rec['flops_per_device']:.3e} "
+              f"hbm/dev {rec['hbm_bytes_per_device']/1e9:.1f}GB "
+              f"ici/dev {rec['ici_bytes_per_device']/1e9:.2f}GB "
+              f"temp {mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] FAIL {cfg.name} × {shape_name} × {mesh_name}: {e}")
+    _append(results_path, rec)
+    return rec
+
+
+def _append(path: Path, rec: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def completed(path: Path):
+    done = set()
+    if path.exists():
+        for line in path.read_text().splitlines():
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") in ("ok", "skipped"):
+                done.add((r["arch"], r["shape"], r["mesh"]))
+    return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="1pod", choices=["1pod", "2pod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--results", default=str(RESULTS))
+    ap.add_argument("--order", default="small-first",
+                    choices=["small-first", "listed"])
+    args = ap.parse_args()
+    results_path = Path(args.results)
+    meshes = ["1pod", "2pod"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        archs = list(ARCH_IDS)
+        if args.order == "small-first":
+            from ..models import backbone as BB
+            archs.sort(key=lambda a: BB.count_params(get_config(a)))
+        shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+
+    done = completed(results_path)
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                cfg_name = get_config(arch).name
+                if (cfg_name, shape_name, mesh_name) in done:
+                    print(f"[dryrun] cached {cfg_name} × {shape_name} × "
+                          f"{mesh_name}")
+                    continue
+                run_cell(arch, shape_name, mesh_name, results_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,414 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports FLOPs/bytes/collectives for scanned-layer models by the trip
+count (≈ n_layers).  This module re-derives the three roofline terms from
+the HLO text with loop multiplicity:
+
+  * computations are parsed into blocks; while ops give (condition, body)
+    edges; trip counts are read from the loop-condition's compare constant;
+  * multipliers propagate ENTRY → callees (while body/cond ×trips, call /
+    conditional ×1, fusion/reduce-apply ×1 for flops but excluded from the
+    traffic model — fusion internals live in registers/VMEM);
+  * dot FLOPs = 2 · |result| · |contracting dims| (from operand shapes);
+  * HBM traffic = Σ over traffic ops (result + distinct operand bytes), the
+    same convention XLA's HloCostAnalysis uses;
+  * collective ICI bytes use ring models on the replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+# computation headers start at column 0: "%name (params...) -> type {"
+_COMP_START = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
+_OP_HEAD = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_array(t: str) -> Tuple[Optional[str], List[int]]:
+    m = _ARRAY_RE.search(t)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    types: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_HEAD.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        # split operands from attrs at the paren matching "opcode("
+        start = m.end()            # index just past the '('
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = line[start:i - 1]
+        attrs = line[i:]
+        operands = _OPERAND_RE.findall(operand_str)
+        op = Op(name, type_str.strip(), opcode, operands, attrs, line)
+        cur.ops.append(op)
+        cur.types[name] = op.type_str
+    return comps
+
+
+def _callee_edges(op: Op) -> List[Tuple[str, str]]:
+    """(kind, computation-name) edges from an op."""
+    edges = []
+    for kw, kind in (("body=", "while_body"), ("condition=", "while_cond"),
+                     ("calls=", "fusion"), ("to_apply=", "apply")):
+        for m in re.finditer(re.escape(kw) + r"\{?%?([\w\.\-]+)", op.attrs):
+            edges.append((kind, m.group(1)))
+    if op.opcode == "conditional":
+        for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.attrs):
+            for n in _OPERAND_RE.findall(m.group(1)):
+                edges.append(("call", n))
+        for m in re.finditer(r"(?:true|false)_computation=%?([\w\.\-]+)",
+                             op.attrs):
+            edges.append(("call", m.group(1)))
+    return edges
+
+
+_TRIP_RE = re.compile(r"known_trip_count\\?\":\{\\?\"n\\?\":\\?\"(\d+)")
+
+
+def _op_trip_count(op: Op, comps: Dict[str, "Computation"]) -> int:
+    """Trip count of a while op: XLA records it in backend_config
+    (known_trip_count); fall back to the condition's compare constant."""
+    m = _TRIP_RE.search(op.attrs)
+    if m:
+        return int(m.group(1))
+    cond = next((c for k, c in _callee_edges(op) if k == "while_cond"), None)
+    if cond in comps:
+        best = 1
+        for cop in comps[cond].ops:
+            for mm in _CONST_RE.finditer(cop.line):
+                best = max(best, int(mm.group(1)))
+        return best
+    return 1
+
+
+def compute_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: Dict[str, float] = {n: 0.0 for n in comps}
+    kind_of: Dict[str, str] = {n: "top" for n in comps}
+    if entry is None:
+        return {n: 1.0 for n in comps}
+    mult[entry] = 1.0
+    # topological-ish propagation: iterate to fixpoint (call graph is a DAG)
+    for _ in range(64):
+        changed = False
+        new = dict(mult)
+        for n in comps:
+            new[n] = 1.0 if n == entry else 0.0
+        for n, comp in comps.items():
+            m = mult.get(n, 0.0)
+            if m <= 0:
+                continue
+            for op in comp.ops:
+                for kind, callee in _callee_edges(op):
+                    if callee not in comps:
+                        continue
+                    k = m
+                    if kind in ("while_body", "while_cond"):
+                        trips = _op_trip_count(op, comps)
+                        k = m * max(trips, 1)
+                        kind_of[callee] = "loop"
+                    elif kind == "fusion":
+                        kind_of[callee] = "fusion"
+                    elif kind == "apply":
+                        kind_of[callee] = "apply"
+                    else:
+                        kind_of.setdefault(callee, "call")
+                    new[callee] = new.get(callee, 0.0) + k
+        if new != mult:
+            mult = new
+            changed = True
+        if not changed:
+            break
+    mult["__kinds__"] = kind_of  # type: ignore
+    return mult
+
+
+def dot_flops(op: Op, types: Dict[str, str]) -> float:
+    _, rdims = _first_array(op.type_str)
+    out = 1.0
+    for d in rdims:
+        out *= d
+    lhs = op.operands[0] if op.operands else None
+    lhs_t = types.get(lhs, "")
+    _, ldims = _first_array(lhs_t)
+    cm = _DIMS_RE["lhs_c"].search(op.attrs)
+    contract = 1.0
+    if cm and ldims:
+        for i in cm.group(1).split(","):
+            if i and int(i) < len(ldims):
+                contract *= ldims[int(i)]
+    return 2.0 * out * contract
+
+
+def conv_flops(op: Op, types: Dict[str, str]) -> float:
+    """2 · |out| · Cin/g · prod(kernel spatial) — approximate via rhs shape."""
+    _, rdims = _first_array(op.type_str)
+    out = 1.0
+    for d in rdims:
+        out *= d
+    rhs_t = types.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    _, kdims = _first_array(rhs_t)
+    k = 1.0
+    for d in kdims[:-1]:   # all but output-feature dim (approximation)
+        k *= d
+    return 2.0 * out * k
+
+
+def collective_traffic(op: Op, n_devices: int) -> Tuple[str, float, float]:
+    kind = op.opcode.replace("-start", "")
+    size = _type_bytes(op.type_str)
+    if op.opcode.endswith("-start") and op.type_str.startswith("("):
+        size /= 2.0          # start tuples carry (operand, result) buffers
+    g = n_devices
+    gm = _GROUPS_RE.search(op.attrs)
+    if gm:
+        g = len(gm.group(1).split(","))
+    else:
+        im = _IOTA_RE.search(op.attrs)
+        if im:
+            g = int(im.group(2))
+    g = max(g, 1)
+    if kind == "all-gather":
+        t = size * (g - 1) / g
+    elif kind == "all-reduce":
+        t = 2.0 * size * (g - 1) / g
+    elif kind == "reduce-scatter":
+        t = size * (g - 1)
+    elif kind == "all-to-all":
+        t = size * (g - 1) / g
+    else:
+        t = float(size)
+    return kind, float(size), t
+
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "iota", "partition-id", "replica-id"}
+
+
+def _op_traffic(op: Op, comp: Computation, comps: Dict[str, Computation]
+                ) -> float:
+    """HBM bytes for one top-level op, slice-aware:
+      * dynamic-slice reads only the slice (result bytes ×2: read+write);
+      * dynamic-update-slice writes only the update (update bytes ×2);
+      * fusions are inspected: params consumed solely by dynamic-slice count
+        as slice bytes; a dynamic-update-slice root counts as update bytes
+        (XLA aliases the buffer in-place inside loop bodies);
+      * everything else: result + distinct operand bytes (XLA's own
+        HloCostAnalysis convention)."""
+    if op.opcode == "dynamic-slice":
+        return 2.0 * _type_bytes(op.type_str)
+    if op.opcode == "dynamic-update-slice":
+        upd = comp.types.get(op.operands[1], "") if len(op.operands) > 1 else ""
+        return 2.0 * _type_bytes(upd)
+    if op.opcode == "fusion":
+        callee = next((c for k, c in _callee_edges(op) if k == "fusion"),
+                      None)
+        if callee in comps:
+            return _fusion_traffic(op, comp, comps[callee])
+    b = float(_type_bytes(op.type_str))
+    for o in set(op.operands):
+        b += _type_bytes(comp.types.get(o, ""))
+    return b
+
+
+_PURE_CONVERT_OPS = {"parameter", "convert", "bitcast", "reshape",
+                     "constant", "broadcast"}
+
+
+def _fusion_traffic(op: Op, comp: Computation, fused: Computation) -> float:
+    non_param = [f for f in fused.ops if f.opcode != "parameter"]
+    # pure dtype-convert fusions are CPU-backend artifacts (XLA:CPU upcasts
+    # bf16 dots to f32); a TPU MXU program reads bf16 directly — skip them.
+    # The converted value is still charged where it is consumed (dot operand).
+    if non_param and all(f.opcode in _PURE_CONVERT_OPS for f in non_param):
+        return 0.0
+    # convert-of-slice fusions: charge the slice read only (on TPU the
+    # consumer dot reads the weight slice directly, no materialized convert)
+    if non_param and all(f.opcode in _PURE_CONVERT_OPS
+                         or f.opcode == "dynamic-slice" for f in non_param):
+        return float(sum(_type_bytes(f.type_str) for f in non_param
+                         if f.opcode == "dynamic-slice"))
+
+    defs: Dict[str, Op] = {f.name: f for f in fused.ops}
+    uses: Dict[str, List[Op]] = {}
+    for fop in fused.ops:
+        for o in fop.operands:
+            uses.setdefault(o, []).append(fop)
+
+    PURE = {"convert", "bitcast", "reshape", "copy", "transpose"}
+
+    def terminals(name: str) -> List[Tuple[Op, str]]:
+        """Non-pure consumers reachable through pure unary chains, as
+        (consumer, operand-name-at-consumption)."""
+        out: List[Tuple[Op, str]] = []
+        frontier = [name]
+        seen = set()
+        while frontier:
+            n = frontier.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            for u in uses.get(n, []):
+                if u.opcode in PURE:
+                    frontier.append(u.name)
+                else:
+                    out.append((u, n))
+        return out
+
+    dus_ops = [f for f in fused.ops if f.opcode == "dynamic-update-slice"]
+
+    total = 0.0
+    for fop in fused.ops:
+        if fop.opcode != "parameter":
+            continue
+        terms = terminals(fop.name)
+        if terms and all(
+                (t.opcode == "dynamic-slice" and t.operands
+                 and t.operands[0] == via)
+                or (t.opcode == "dynamic-update-slice" and t.operands
+                    and t.operands[0] == via)
+                for t, via in terms):
+            # consumed only as slice reads / in-place DUS bases
+            total += sum(_type_bytes(t.type_str) for t, _ in terms
+                         if t.opcode == "dynamic-slice")
+        else:
+            total += _type_bytes(fop.type_str)
+
+    # result side: a DUS (possibly wrapped in converts) writes only the slice
+    if dus_ops:
+        for d in dus_ops:
+            if len(d.operands) > 1:
+                upd = d.operands[1]
+                total += _type_bytes(
+                    defs[upd].type_str if upd in defs else
+                    fused.types.get(upd, ""))
+    else:
+        total += _type_bytes(op.type_str)
+    return total
+
+
+def analyze(text: str, n_devices: int) -> Dict[str, object]:
+    comps = parse_module(text)
+    mult = compute_multipliers(comps)
+    kinds = mult.pop("__kinds__", {})  # type: ignore
+
+    flops = 0.0
+    traffic = 0.0
+    ici = 0.0
+    coll: Dict[str, Dict[str, float]] = {}
+    loops: List[Dict[str, object]] = []
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        is_fusion = kinds.get(name) in ("fusion", "apply")
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += m * dot_flops(op, comp.types)
+            elif op.opcode == "convolution":
+                flops += m * conv_flops(op, comp.types)
+            if is_fusion:
+                continue
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                kind, size, t = collective_traffic(op, n_devices)
+                d = coll.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                           "ici_bytes": 0.0})
+                d["count"] += m
+                d["bytes"] += m * size
+                d["ici_bytes"] += m * t
+                ici += m * t
+                continue
+            if op.opcode in _NO_TRAFFIC or op.opcode.endswith("-done"):
+                continue
+            traffic += m * _op_traffic(op, comp, comps)
+        for op in comp.ops:
+            if op.opcode == "while":
+                loops.append({"in": name,
+                              "trips": _op_trip_count(op, comps)})
+
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": traffic,
+        "ici_bytes_per_device": ici,
+        "collectives": coll,
+        "loops": loops,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is the
+DCN-ish outer axis (gradient all-reduce crosses it; everything
+bandwidth-hungry stays inside a pod).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run via "
+            f"launch/dryrun.py which forces XLA_FLAGS host device count")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    devs = jax.devices()[: data * model]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devs)

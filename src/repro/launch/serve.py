@@ -1,0 +1,85 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke
+from ..models import backbone as B
+from .mesh import make_debug_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_production_mesh() if args.production_mesh \
+        else make_debug_mesh(1, 1)
+    key = jax.random.PRNGKey(0)
+    params = B.init_params(cfg, key)
+    max_seq = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    enc_out = None
+    extra = {}
+    if cfg.frontend == "audio":
+        frames = jnp.zeros((args.batch, cfg.enc_dec.enc_seq, cfg.d_model))
+        enc_out = B.run_encoder(cfg, params, frames)
+    if cfg.frontend == "vision":
+        extra["patches"] = jnp.zeros((args.batch, cfg.n_patches,
+                                      cfg.d_model))
+
+    decode = jax.jit(
+        lambda p, c, t, pos: B.decode_step(cfg, p, c, t, pos,
+                                           enc_out=enc_out),
+        donate_argnums=(1,))
+
+    with mesh:
+        # prefill: replay prompt through decode steps to fill the cache
+        # (token-by-token prefill — the batched prefill path is exercised by
+        # benchmarks/serving.py; this driver shows the decode loop)
+        cache = B.init_cache(cfg, args.batch, max_seq)
+        t0 = time.time()
+        logits = None
+        for t in range(args.prompt_len):
+            logits, cache = decode(params, cache, prompts[:, t:t + 1],
+                                   jnp.asarray(t))
+        t_prefill = time.time() - t0
+
+        tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens = [tokens]
+        t0 = time.time()
+        for t in range(args.prompt_len, max_seq - 1):
+            logits, cache = decode(params, cache, tokens, jnp.asarray(t))
+            tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            out_tokens.append(tokens)
+        dt = time.time() - t0
+        gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+
+    n_gen = gen.shape[1] - 1
+    print(f"[serve] {cfg.name}: batch {args.batch}, prompt "
+          f"{args.prompt_len}, generated {n_gen} tokens/seq")
+    print(f"[serve] prefill {t_prefill:.2f}s; decode "
+          f"{dt / max(n_gen, 1) * 1000:.1f} ms/token/batch "
+          f"({args.batch * n_gen / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample continuation: {gen[0, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+No device allocation — the dry-run lowers against these.  Modality
+frontends are STUBS per the assignment: ``[audio]``/``[vlm]`` entries get
+precomputed frame/patch embeddings as inputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import backbone as B
+from ..models.config import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    gb, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        batch["tokens"] = SDS((gb, s - cfg.n_patches), jnp.int32)
+        batch["patches"] = SDS((gb, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        batch["labels"] = SDS((gb, s - cfg.n_patches), jnp.int32)
+    else:
+        batch["tokens"] = SDS((gb, s), jnp.int32)
+        batch["labels"] = SDS((gb, s), jnp.int32)
+    if cfg.frontend == "audio":
+        batch["frames"] = SDS((gb, cfg.enc_dec.enc_seq, cfg.d_model),
+                              jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels", None)
+    return b
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(cache, tokens, pos[, enc_out]) ShapeDtypeStructs."""
+    gb, s = shape.global_batch, shape.seq_len
+    cache = B.cache_specs(cfg, gb, s)
+    tokens = SDS((gb, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    enc_out = None
+    if cfg.enc_dec is not None:
+        enc_out = SDS((gb, cfg.enc_dec.enc_seq, cfg.d_model), jnp.bfloat16)
+    return cache, tokens, pos, enc_out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    cache, tokens, pos, enc_out = decode_input_specs(cfg, shape)
+    out = {"cache": cache, "tokens": tokens, "pos": pos}
+    if enc_out is not None:
+        out["enc_out"] = enc_out
+    return out
+
+
+def cell_is_applicable(cfg: ArchConfig, shape: ShapeConfig
+                       ) -> Tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (assignment rule)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure/global full-attention architecture — "
+                       "524k-token dense decode is not sub-quadratic "
+                       "(see DESIGN.md §4)")
+    return True, ""

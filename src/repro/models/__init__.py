@@ -1,0 +1,8 @@
+from .config import (ArchConfig, MoEConfig, EncDecConfig, ShapeConfig,
+                     SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+                     reduced)
+from . import backbone, layers, recurrent
+
+__all__ = ["ArchConfig", "MoEConfig", "EncDecConfig", "ShapeConfig",
+           "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+           "reduced", "backbone", "layers", "recurrent"]

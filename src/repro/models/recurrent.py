@@ -1,0 +1,275 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both are first-order linear recurrences — the TPU-friendly forms are:
+  * RG-LRU: log-depth ``jax.lax.associative_scan`` over time (train/prefill)
+    and an O(1)-state step (decode).
+  * RWKV6: chunked parallel form (FLA-style) — inter-chunk state scan +
+    intra-chunk (C×C) parallel attention-like computation, all decays in
+    log-space for stability.  Decode is the O(1) per-step recurrence.
+
+These are the paper's "RNN future work" delivered; the elementwise gate
+chains are DFP territory (see kernels/rglru_scan, kernels/rwkv6_scan for the
+Pallas flavours validated in interpret mode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+RGLRU_C = 8.0          # Griffin's fixed recurrence sharpness constant
+RWKV_CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _causal_conv1d(x: Array, w: Array, b: Array,
+                   state: Array | None = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv, width W.  x: (B,S,D); w: (W,D); b: (D,).
+    state: (B, W-1, D) trailing inputs from the previous segment.
+    Returns (y, new_state)."""
+    bsz, s, d = x.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, d), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xp[:, i:i + s] * w[i]
+    new_state = xp[:, -(width - 1):] if width > 1 else state
+    return y + b, new_state
+
+
+def rglru_gates(p: Dict[str, Array], u: Array) -> Tuple[Array, Array]:
+    """(log a_t, b_t) from the post-conv branch u: (B,S,dr)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, p["wx"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return log_a, b
+
+
+def rglru_seq(p: Dict[str, Array], u: Array,
+              h0: Array | None = None) -> Tuple[Array, Array]:
+    """Sequence RG-LRU via associative scan.  u: (B,S,dr).
+    Returns (h: (B,S,dr), h_last: (B,dr))."""
+    log_a, b = rglru_gates(p, u)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1].astype(u.dtype)
+
+
+def rglru_step(p: Dict[str, Array], u: Array, h: Array) -> Tuple[Array, Array]:
+    """One decode step.  u: (B,1,dr); h: (B,dr)."""
+    log_a, b = rglru_gates(p, u)
+    a = jnp.exp(log_a[:, 0])
+    h_new = a * h.astype(jnp.float32) + b[:, 0]
+    return h_new.astype(u.dtype)[:, None], h_new.astype(u.dtype)
+
+
+def rglru_block_seq(p: Dict[str, Array], x: Array,
+                    state: Dict[str, Array] | None = None
+                    ) -> Tuple[Array, Dict[str, Array]]:
+    """Full Griffin recurrent block (sequence form).
+    x: (B,S,D) → (B,S,D), plus carry state for segment continuation."""
+    u = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    g = jnp.einsum("bsd,de->bse", x, p["w_gate"])
+    conv_state = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    u, conv_state = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    h, h_last = rglru_seq(p, u, h0)
+    y = h * jax.nn.gelu(g)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rglru_block_step(p: Dict[str, Array], x: Array,
+                     state: Dict[str, Array]
+                     ) -> Tuple[Array, Dict[str, Array]]:
+    u = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    g = jnp.einsum("bsd,de->bse", x, p["w_gate"])
+    u, conv_state = _causal_conv1d(u, p["conv_w"], p["conv_b"], state["conv"])
+    h, h_last = rglru_step(p, u, state["h"])
+    y = h * jax.nn.gelu(g)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rglru_init_state(bsz: int, dr: int, conv_width: int, dtype) -> Dict[str, Array]:
+    return {"h": jnp.zeros((bsz, dr), dtype),
+            "conv": jnp.zeros((bsz, conv_width - 1, dr), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix
+# ---------------------------------------------------------------------------
+
+def _lora(x: Array, a: Array, b: Array) -> Array:
+    return jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", x, a)), b)
+
+
+def rwkv_shift(x: Array, last: Array | None) -> Array:
+    """Token shift: previous token's features (zeros / carried at start)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def rwkv_mix_inputs(p: Dict[str, Array], x: Array, xs: Array):
+    """Data-dependent lerp (RWKV6): per-target mixes for r,k,v,w,g."""
+    dx = xs - x
+    xm = x + dx * p["mu_x"]
+    outs = {}
+    for t in ("r", "k", "v", "w", "g"):
+        mix = p[f"mu_{t}"] + _lora(xm, p[f"lora_a_{t}"], p[f"lora_b_{t}"])
+        outs[t] = x + dx * mix
+    return outs
+
+
+def rwkv_time_mix_seq(p: Dict[str, Array], x: Array, n_heads: int,
+                      state: Dict[str, Array] | None = None
+                      ) -> Tuple[Array, Dict[str, Array]]:
+    """RWKV6 time mix, chunked parallel form.  x: (B,S,D)."""
+    bsz, s, d = x.shape
+    hd = d // n_heads
+    last_x = None if state is None else state["last_x"]
+    s0 = None if state is None else state["S"]
+    xs = rwkv_shift(x, last_x)
+    m = rwkv_mix_inputs(p, x, xs)
+    r = jnp.einsum("bsd,de->bse", m["r"], p["wr"]).reshape(bsz, s, n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", m["k"], p["wk"]).reshape(bsz, s, n_heads, hd)
+    v = jnp.einsum("bsd,de->bse", m["v"], p["wv"]).reshape(bsz, s, n_heads, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", m["g"], p["wg"]))
+    logw = -jnp.exp((p["w0"] + _lora(m["w"], p["lora_a_w"], p["lora_b_w"])
+                     ).astype(jnp.float32))          # (B,S,D), ≤ 0
+    logw = logw.reshape(bsz, s, n_heads, hd)
+    u = p["u"].reshape(n_heads, hd)
+
+    o, s_last = _wkv_chunked(r, k, v, logw, u, s0)
+    o = o.reshape(bsz, s, d)
+    # per-head groupnorm then gate
+    og = o.reshape(bsz, s, n_heads, hd).astype(jnp.float32)
+    mu = og.mean(-1, keepdims=True)
+    var = ((og - mu) ** 2).mean(-1, keepdims=True)
+    og = ((og - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(bsz, s, d)
+    og = og.astype(x.dtype) * p["gn_gain"] + p["gn_bias"]
+    out = jnp.einsum("bsd,de->bse", og * g, p["wo"])
+    return out, {"last_x": x[:, -1], "S": s_last}
+
+
+def _wkv_chunked(r, k, v, logw, u, s0):
+    """Chunked WKV.  r,k,v,logw: (B,S,H,hd) with logw ≤ 0; u: (H,hd).
+    State S: (B,H,hd_k,hd_v).  Returns (o: (B,S,H,hd), S_last)."""
+    bsz, s, h, hd = r.shape
+    c = min(RWKV_CHUNK, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by chunk {c}")
+    nc = s // c
+    rc = r.reshape(bsz, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(bsz, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(bsz, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    wc = logw.reshape(bsz, nc, c, h, hd).transpose(1, 0, 3, 2, 4)
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, hd, hd), jnp.float32)
+
+    idx = jnp.arange(c)
+    strict = idx[:, None] > idx[None, :]       # j < i
+
+    def step(S, xs):
+        rb, kb, vb, wb = xs                    # (B,H,C,hd)
+        cum = jnp.cumsum(wb, axis=2)           # inclusive Σ logw
+        p_i = cum - wb                         # exclusive (through i-1)
+        # contribution of carried state: (r_i ⊙ e^{p_i}) · S
+        rs = rb * jnp.exp(p_i)
+        o_state = jnp.einsum("bhck,bhkv->bhcv", rs, S)
+        # intra-chunk: s_ij = Σ_d r_i k_j e^{p_i - cum_j}   (j < i)
+        # exponent Σ_{l∈(j,i-1]} logw ≤ 0 on the valid triangle, so the exp
+        # is computed only there (masked to -inf elsewhere → exact 0).
+        dd = p_i[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,H,C,C,hd)
+        dd = jnp.where(strict[None, None, :, :, None], dd, -jnp.inf)
+        att = jnp.einsum("bhck,bhcjk->bhcj", rb,
+                         kb[:, :, None, :, :] * jnp.exp(dd))
+        # diagonal bonus term
+        diag = jnp.einsum("bhck,bhck->bhc", rb * u[None, :, None, :], kb)
+        o = o_state + jnp.einsum("bhcj,bhjv->bhcv", att, vb) \
+            + diag[..., None] * vb
+        # state update: S' = e^{cum_C} ⊙_k S + Σ_j (k_j e^{cum_C - cum_j})⊗v_j
+        tot = cum[:, :, -1:, :]                # (B,H,1,hd)
+        kd = kb * jnp.exp(tot - cum)
+        S_new = jnp.exp(tot[:, :, 0, :])[..., None] * S + \
+            jnp.einsum("bhjk,bhjv->bhkv", kd, vb)
+        return S_new, o
+
+    s_last, oc = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(bsz, s, h, hd)
+    return o, s_last
+
+
+def rwkv_time_mix_step(p: Dict[str, Array], x: Array, n_heads: int,
+                       state: Dict[str, Array]
+                       ) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step.  x: (B,1,D)."""
+    bsz, _, d = x.shape
+    hd = d // n_heads
+    xs = rwkv_shift(x, state["last_x"])
+    m = rwkv_mix_inputs(p, x, xs)
+    r = jnp.einsum("bsd,de->bse", m["r"], p["wr"]).reshape(bsz, n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", m["k"], p["wk"]).reshape(bsz, n_heads, hd)
+    v = jnp.einsum("bsd,de->bse", m["v"], p["wv"]).reshape(bsz, n_heads, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", m["g"], p["wg"]))[:, 0]
+    logw = -jnp.exp((p["w0"] + _lora(m["w"], p["lora_a_w"], p["lora_b_w"])
+                     ).astype(jnp.float32))[:, 0].reshape(bsz, n_heads, hd)
+    u = p["u"].reshape(n_heads, hd)
+    S = state["S"]
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    o = jnp.einsum("bhk,bhkv->bhv", rf, S) + \
+        jnp.einsum("bhk,bhk,bhv->bhv", rf, u[None] * kf, vf)
+    S_new = jnp.exp(logw)[..., None] * S + \
+        jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    o = o.reshape(bsz, d)
+    of = o.reshape(bsz, n_heads, hd)
+    mu = of.mean(-1, keepdims=True)
+    var = ((of - mu) ** 2).mean(-1, keepdims=True)
+    of = ((of - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(bsz, d)
+    og = of.astype(x.dtype) * p["gn_gain"] + p["gn_bias"]
+    out = jnp.einsum("bd,de->be", og * g, p["wo"])[:, None]
+    return out, {"last_x": x[:, -1], "S": S_new}
+
+
+def rwkv_channel_mix_seq(p: Dict[str, Array], x: Array,
+                         last_x: Array | None = None
+                         ) -> Tuple[Array, Array]:
+    xs = rwkv_shift(x, last_x)
+    dx = xs - x
+    xk = x + dx * p["mu_ck"]
+    xr = x + dx * p["mu_cr"]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ck"])
+    kk = jnp.square(jnp.maximum(kk, 0.0))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"]))
+    out = rr * jnp.einsum("bsf,fd->bsd", kk, p["cv"])
+    return out, x[:, -1]
+
+
+def rwkv_init_state(bsz: int, d: int, n_heads: int, dtype) -> Dict[str, Array]:
+    hd = d // n_heads
+    return {"last_x": jnp.zeros((bsz, d), dtype),
+            "S": jnp.zeros((bsz, n_heads, hd, hd), jnp.float32),
+            "last_xc": jnp.zeros((bsz, d), dtype)}

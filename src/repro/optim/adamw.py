@@ -1,0 +1,74 @@
+"""AdamW with sharded moments (ZeRO-ready) and optional bf16 moment storage
+(needed to fit the 1T-param MoE on 512 × 16 GB chips)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # 'bfloat16' halves optimizer memory
+
+
+def init_opt_state(params, ocfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(ocfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_spec_tree) -> Dict[str, Any]:
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, state, ocfg: AdamWConfig, lr: jax.Array
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9)) \
+        if ocfg.grad_clip else 1.0
+    dt = jnp.dtype(ocfg.moment_dtype)
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mh = m32 / c1
+        vh = v32 / c2
+        delta = mh / (jnp.sqrt(vh) + ocfg.eps) + \
+            ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(dt), v32.astype(dt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm}

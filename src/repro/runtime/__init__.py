@@ -1,0 +1,8 @@
+from .async_queue import AsyncQueue, VirtualAllocator, VirtualPtr
+from .packed import pack_transfer, unpack_on_device, PackedTransfer
+from .straggler import StragglerMonitor
+from .failures import FailureSimulator, run_with_restart
+
+__all__ = ["AsyncQueue", "VirtualAllocator", "VirtualPtr", "pack_transfer",
+           "unpack_on_device", "PackedTransfer", "StragglerMonitor",
+           "FailureSimulator", "run_with_restart"]

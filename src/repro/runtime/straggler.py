@@ -1,0 +1,86 @@
+"""Straggler mitigation for 1000+-node fleets.
+
+SPMD steps are synchronous, so one slow host stalls the fleet.  The
+monitor tracks a rolling per-step latency distribution and flags hosts
+whose EWMA exceeds ``threshold ×`` the fleet median.  Mitigations (hooked
+by the trainer):
+
+  * ``rebalance`` — shrink the flagged host's microbatch share (the data
+    loader consumes the new assignment at the next boundary);
+  * ``evict``     — treat the host as failed → elastic restart path
+    (checkpoint restore onto the reduced mesh).
+
+Single-process here: the monitor is driven with recorded per-step times in
+tests; on a real fleet the times come from each host's step clock via the
+coordination service.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class HostStats:
+    ewma: float = 0.0
+    steps: int = 0
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, *, alpha: float = 0.2,
+                 threshold: float = 1.5, evict_threshold: float = 3.0,
+                 warmup_steps: int = 5):
+        self.hosts: Dict[int, HostStats] = {
+            i: HostStats() for i in range(n_hosts)}
+        self.alpha = alpha
+        self.threshold = threshold
+        self.evict_threshold = evict_threshold
+        self.warmup = warmup_steps
+        self.history: List[Dict[int, float]] = []
+
+    def record_step(self, times: Dict[int, float]) -> None:
+        self.history.append(dict(times))
+        for h, t in times.items():
+            st = self.hosts[h]
+            st.ewma = t if st.steps == 0 else \
+                (1 - self.alpha) * st.ewma + self.alpha * t
+            st.steps += 1
+
+    def _baseline(self) -> float:
+        """Robust fleet baseline: lower quartile of host EWMAs (the median
+        itself is dragged up when several hosts straggle)."""
+        vals = sorted(s.ewma for s in self.hosts.values() if s.steps > 0)
+        if not vals:
+            return 0.0
+        if len(vals) < 4:
+            return vals[0]
+        return statistics.quantiles(vals, n=4)[0]
+
+    def flagged(self) -> Dict[int, str]:
+        """host -> 'rebalance' | 'evict'."""
+        med = self._baseline()
+        out: Dict[int, str] = {}
+        if med <= 0:
+            return out
+        for h, st in self.hosts.items():
+            if st.steps < self.warmup:
+                continue
+            r = st.ewma / med
+            if r >= self.evict_threshold:
+                out[h] = "evict"
+            elif r >= self.threshold:
+                out[h] = "rebalance"
+        return out
+
+    def microbatch_shares(self, base: int = 1) -> Dict[int, float]:
+        """Work shares inversely proportional to EWMA latency (bounded)."""
+        med = self._baseline()
+        shares = {}
+        for h, st in self.hosts.items():
+            if st.steps == 0 or med == 0:
+                shares[h] = 1.0
+            else:
+                shares[h] = max(0.5, min(1.0, med / st.ewma))
+        return shares

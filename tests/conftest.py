@@ -1,0 +1,5 @@
+import os
+
+# tests run on the single real CPU device; ONLY launch/dryrun.py forces the
+# 512-device host platform (before any jax import), never the test suite.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,128 @@
+"""SOL compiler unit + property tests: IR invariants, the paper's
+high-level optimizations, module assignment, fusion-group formation."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core import ir, passes
+from repro.core.executor import lower_graph
+from repro.core.ir import Graph, Module, Node, OpKind, TensorSpec
+
+
+def _chain_graph(ops):
+    """Build input -> op chain -> output graph from OpKind list."""
+    x = ir.input_node((4, 8, 8, 8), dims=(), name="x")  # NCHW-ish rank 4
+    cur = x
+    params = {}
+    for i, op in enumerate(ops):
+        if op is OpKind.MAXPOOL or op is OpKind.AVGPOOL:
+            s = cur.spec.shape
+            spec = TensorSpec((s[0], s[1], s[2] // 2, s[3] // 2))
+            cur = Node(op, [cur], spec, attrs={"kernel": 2, "stride": 2})
+        else:
+            cur = Node(op, [cur], cur.spec)
+    return Graph(inputs=[x], outputs=[cur], params=params)
+
+
+def test_relu_maxpool_fold_forward():
+    g = _chain_graph([OpKind.RELU, OpKind.MAXPOOL])
+    passes.simplify(g)
+    kinds = [n.op for n in g.topo()]
+    assert OpKind.RELU not in kinds
+    pool = g.nodes_of(OpKind.MAXPOOL)[0]
+    assert pool.attrs["min_value"] == 0.0
+
+
+def test_relu_maxpool_fold_backward():
+    g = _chain_graph([OpKind.MAXPOOL, OpKind.RELU])
+    passes.simplify(g)
+    assert OpKind.RELU not in [n.op for n in g.topo()]
+
+
+def test_fold_preserves_semantics():
+    backend = get_backend("xla")
+    for order in ([OpKind.RELU, OpKind.MAXPOOL], [OpKind.MAXPOOL, OpKind.RELU]):
+        g = _chain_graph(order)
+        ref_fn = lower_graph(g, backend)
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8, 8))
+        y_ref = ref_fn({}, x)
+        g2 = _chain_graph(order)
+        g2 = passes.run_pipeline(g2, backend)
+        y_opt = lower_graph(g2, backend)({}, x)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_opt),
+                                   rtol=1e-6)
+
+
+def test_module_assignment_paper_rules():
+    x = ir.input_node((1, 8, 8, 8))
+    w = ir.param_node((8, 1, 3, 3))
+    conv_dw = Node(OpKind.CONV2D, [x, w], TensorSpec((1, 8, 6, 6)),
+                   attrs={"groups": 8, "out_channels": 8})
+    conv = Node(OpKind.CONV2D, [conv_dw, ir.param_node((4, 8, 3, 3))],
+                TensorSpec((1, 4, 4, 4)),
+                attrs={"groups": 1, "out_channels": 4})
+    relu = Node(OpKind.RELU, [conv], conv.spec)
+    g = Graph([x], [relu], {})
+    passes.assign_modules(g)
+    # depthwise conv (groups == out_channels) → DFP (WeightedPooling case)
+    assert conv_dw.module is Module.DFP
+    assert conv_dw.attrs.get("as_weighted_pool")
+    assert conv.module is Module.DNN
+    assert relu.module is Module.DFP
+
+
+def test_fusion_groups_formed():
+    g = _chain_graph([OpKind.RELU, OpKind.TANH, OpKind.EXP])
+    passes.assign_modules(g)
+    passes.form_fusion_groups(g)
+    fused = g.nodes_of(OpKind.FUSED)
+    assert len(fused) == 1
+    assert fused[0].attrs["length"] == 3
+
+
+ELEMENTWISE = [OpKind.RELU, OpKind.GELU, OpKind.SILU, OpKind.TANH,
+               OpKind.SIGMOID, OpKind.EXP]
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    ops=st.lists(st.sampled_from(ELEMENTWISE + [OpKind.MAXPOOL]),
+                 min_size=1, max_size=6),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_pipeline_preserves_semantics_property(ops, seed):
+    """Property: the full SOL pass pipeline never changes the function."""
+    backend = get_backend("xla")
+    # pooling halves spatial dims; cap pool count so shapes stay valid
+    pools = sum(1 for o in ops if o is OpKind.MAXPOOL)
+    hypothesis.assume(pools <= 2)
+    g_ref = _chain_graph(ops)
+    g_opt = _chain_graph(ops)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 8, 8, 8))
+    y_ref = lower_graph(g_ref, backend)({}, x)
+    g_opt = passes.run_pipeline(g_opt, backend)
+    g_opt.validate()
+    y_opt = lower_graph(g_opt, backend)({}, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_opt),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_graph_validate_rejects_cycles():
+    x = ir.input_node((2, 2))
+    a = Node(OpKind.RELU, [x], x.spec)
+    b = Node(OpKind.TANH, [a], x.spec)
+    a.inputs.append(b)  # cycle
+    g = Graph([x], [b], {})
+    with pytest.raises((AssertionError, RecursionError)):
+        g.validate()
+
+
+def test_layout_assignment_counts_reorders():
+    backend = get_backend("xla")
+    g = _chain_graph([OpKind.RELU])
+    passes.run_pipeline(g, backend)
+    assert hasattr(g, "layout_reorders")

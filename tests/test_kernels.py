@@ -1,0 +1,183 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles, swept over shapes and
+dtypes (interpret=True executes the TPU kernel bodies on CPU)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.avgpool import avgpool
+from repro.kernels.avgpool.ref import avgpool_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kv,hd,bq,bk", [
+    (128, 4, 4, 32, 64, 64),     # MHA
+    (128, 4, 2, 32, 32, 64),     # GQA
+    (256, 8, 1, 16, 64, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(s, h, kv, hd, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (2, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (2, s, kv, hd), dtype)
+    o = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+    r = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window,cap,causal", [
+    (0, 0.0, True), (32, 0.0, True), (0, 20.0, True), (64, 50.0, True),
+    (0, 0.0, False),
+])
+def test_flash_attention_variants(window, cap, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 16))
+    k = jax.random.normal(ks[1], (1, 128, 2, 16))
+    v = jax.random.normal(ks[2], (1, 128, 2, 16))
+    o = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                        bq=32, bk=32, interpret=True)
+    r = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        cap=cap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_matches_model_chunked_path():
+    """Triangle check: Pallas kernel == model's jnp online-softmax scan."""
+    from repro.models import layers as L
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 16))
+    k = jax.random.normal(ks[1], (1, 256, 2, 16))
+    v = jax.random.normal(ks[2], (1, 256, 2, 16))
+    o1 = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    o2 = L._chunked_attention(q, k, v, causal=True, window=0, cap=0.0,
+                              q_pos=jnp.arange(256), kv_pos=jnp.arange(256),
+                              chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- rglru --------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    b=st.integers(1, 3), t=st.sampled_from([8, 32, 96]),
+    d=st.sampled_from([64, 128, 256]), seed=st.integers(0, 1000))
+def test_rglru_scan_property(b, t, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, d)))
+    bb = jax.random.normal(ks[1], (b, t, d)) * 0.1
+    h0 = jax.random.normal(ks[2], (b, d)) * 0.1
+    h1, hl1 = rglru_scan(a, bb, h0, bd=64, interpret=True)
+    h2, hl2 = rglru_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl1), np.asarray(hl2),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- rwkv6 --------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,h,hd", [(16, 2, 16), (64, 4, 32), (32, 1, 64)])
+def test_rwkv6_scan_shapes(t, h, hd):
+    ks = jax.random.split(KEY, 5)
+    shape = (2, t, h, hd)
+    r = jax.random.normal(ks[0], shape) * 0.5
+    k = jax.random.normal(ks[1], shape) * 0.5
+    v = jax.random.normal(ks[2], shape) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], shape) * 0.5)
+    u = jax.random.normal(ks[4], (h, hd)) * 0.3
+    s0 = jnp.zeros((2, h, hd, hd))
+    o1, s1 = rwkv6_scan(r, k, v, logw, u, s0, interpret=True)
+    o2, s2 = rwkv6_scan_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rwkv6_nonzero_initial_state():
+    ks = jax.random.split(KEY, 6)
+    shape = (1, 8, 2, 8)
+    r, k, v = (jax.random.normal(ks[i], shape) * 0.5 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], shape) * 0.5)
+    u = jax.random.normal(ks[4], (2, 8)) * 0.3
+    s0 = jax.random.normal(ks[5], (1, 2, 8, 8)) * 0.2
+    o1, s1 = rwkv6_scan(r, k, v, logw, u, s0, interpret=True)
+    o2, s2 = rwkv6_scan_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- dfp fused ----------------------------------------------------------------
+
+def _dfp_graph_and_inputs(seed, n_ops):
+    """Random elementwise chain as an IR fusion group."""
+    from repro.core import ir
+    from repro.core.ir import Graph, Node, OpKind, TensorSpec
+    from repro.core import passes
+    rng = np.random.default_rng(seed)
+    kinds = [OpKind.RELU, OpKind.GELU, OpKind.SILU, OpKind.TANH,
+             OpKind.SIGMOID, OpKind.SOFTCAP, OpKind.SCALE]
+    x = ir.input_node((4, 32))
+    g1 = ir.param_node((32,), name="gain")
+    cur = x
+    for i in range(n_ops):
+        op = kinds[rng.integers(len(kinds))]
+        attrs = {}
+        if op is OpKind.SOFTCAP:
+            attrs = {"cap": 10.0}
+        if op is OpKind.SCALE:
+            attrs = {"value": 1.7}
+        cur = Node(op, [cur], cur.spec, attrs=attrs)
+    cur = Node(OpKind.RMSNORM, [cur, g1], cur.spec)
+    return Graph([x], [cur], {"gain": g1})
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000), n_ops=st.integers(1, 5))
+def test_dfp_fused_kernel_vs_compose(seed, n_ops):
+    """The Pallas DFP kernel and the XLA compose path agree for random
+    fusion chains (the core DFP-correctness property)."""
+    from repro.core import passes
+    from repro.core.executor import lower_graph
+    from repro.backends import get_backend
+    params = {"gain": jnp.ones((32,)) * 1.1}
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    ys = {}
+    for bk in ("xla", "pallas_interpret"):
+        g = _dfp_graph_and_inputs(seed, n_ops)
+        g = passes.run_pipeline(g, get_backend(bk))
+        ys[bk] = np.asarray(lower_graph(g, get_backend(bk))(params, x))
+    np.testing.assert_allclose(ys["xla"], ys["pallas_interpret"],
+                               rtol=1e-5, atol=1e-6)
+
+
+# -- avgpool (paper Listing 3) ------------------------------------------------
+
+@pytest.mark.parametrize("n,c,hw,k", [(1, 4, 12, 3), (2, 8, 16, 5),
+                                      (1, 1, 8, 2)])
+def test_avgpool_listing3(n, c, hw, k):
+    x = jax.random.normal(KEY, (n, c, hw, hw))
+    np.testing.assert_allclose(
+        np.asarray(avgpool(x, k, k, interpret=True)),
+        np.asarray(avgpool_ref(x, k, k)), rtol=1e-5, atol=1e-6)
