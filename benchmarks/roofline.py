@@ -3,9 +3,13 @@
 Per (arch × shape × mesh) cell, from the loop-aware HLO accounting in
 results/dryrun.jsonl:
 
-  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
-  memory_s     = HLO_bytes_per_device / HBM_bw               (819e9)
-  collective_s = ICI_bytes_per_device / link_bw              (50e9)
+  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory_s     = HLO_bytes_per_device / HBM_bw
+  collective_s = ICI_bytes_per_device / link_bw
+
+with the constants taken from the backend registry's HardwareSpec (the same
+cost model the implementation-election pass in core.passes uses), defaulting
+to the production target (tpu_v5e: 197e12 bf16 / 819e9 / 50e9).
 
 dominant term = bottleneck; MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D
 (MoE); usefulness ratio = MODEL_FLOPS / HLO_FLOPs (catches remat and
@@ -17,9 +21,12 @@ import json
 from pathlib import Path
 from typing import Dict, List, Optional
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+from repro.backends.registry import TPU_V5E
+
+HW = TPU_V5E
+PEAK_FLOPS = HW.peak_flops_bf16
+HBM_BW = HW.hbm_bandwidth
+ICI_BW = HW.ici_bandwidth
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.jsonl"
 
 
@@ -59,8 +66,8 @@ def roofline_row(r: dict) -> Optional[dict]:
     f = r["flops_per_device"]
     b = r["hbm_bytes_per_device"]
     i = r["ici_bytes_per_device"]
-    terms = {"compute": f / PEAK_FLOPS, "memory": b / HBM_BW,
-             "collective": i / ICI_BW}
+    terms = {"compute": HW.compute_s(f), "memory": HW.memory_s(b),
+             "collective": HW.collective_s(i)}
     dom = max(terms, key=terms.get)
     mf = model_flops(r["arch"], r["shape"], r["n_devices"])
     bound = max(terms.values())

@@ -8,35 +8,55 @@ tables).  Prints ``name,us_per_call,derived`` CSV.
   serving     beyond-paper decode throughput smoke
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...]
+
+Exits non-zero if any requested table raises, so CI can gate on the smoke
+step instead of silently shipping a partial CSV.
 """
 from __future__ import annotations
 
 import sys
+import traceback
 
 
-def main() -> None:
-    which = set(sys.argv[1:]) or {"effort", "inference", "training",
-                                  "roofline", "serving"}
-    rows = []
-    if "effort" in which:
+def _table_rows(name: str):
+    if name == "effort":
         from . import paper_tables
-        rows += [(n, v, d) for n, v, d in paper_tables.effort_table()]
-    if "inference" in which:
+        return [(n, v, d) for n, v, d in paper_tables.effort_table()]
+    if name == "inference":
         from . import paper_tables
-        rows += paper_tables.inference_fig3()
-    if "training" in which:
+        return paper_tables.inference_fig3()
+    if name == "training":
         from . import paper_tables
-        rows += paper_tables.training_fig3()
-    if "roofline" in which:
+        return paper_tables.training_fig3()
+    if name == "roofline":
         from . import roofline
-        rows += roofline.csv_rows()
-    if "serving" in which:
+        return roofline.csv_rows()
+    if name == "serving":
         from . import serving
-        rows += serving.decode_bench()
+        return serving.decode_bench()
+    raise KeyError(f"unknown table {name!r}")
+
+
+def main() -> int:
+    which = sys.argv[1:] or ["effort", "inference", "training",
+                             "roofline", "serving"]
+    rows, failed = [], []
+    for name in which:
+        try:
+            rows += _table_rows(name)
+        except Exception:
+            failed.append(name)
+            print(f"[benchmarks] table {name!r} FAILED:", file=sys.stderr)
+            traceback.print_exc()
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"[benchmarks] failed tables: {', '.join(failed)}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

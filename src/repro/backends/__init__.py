@@ -1,4 +1,10 @@
-from .registry import (Backend, get_backend, available_backends,
-                       register_backend)
+from .registry import (Backend, HardwareSpec, Impl, available_backends,
+                       candidates, get_backend, get_impl, register_backend,
+                       register_impl, register_reference_impl,
+                       register_shared_impl, resolve)
+from . import host_cpu as _host_cpu   # registers the host_cpu backend
 
-__all__ = ["Backend", "get_backend", "available_backends", "register_backend"]
+__all__ = ["Backend", "HardwareSpec", "Impl", "available_backends",
+           "candidates", "get_backend", "get_impl", "register_backend",
+           "register_impl", "register_reference_impl",
+           "register_shared_impl", "resolve"]

@@ -1,0 +1,76 @@
+"""The ``host_cpu`` backend — the paper's SX-Aurora exercise replayed on our
+codebase: prove that standing up a device backend costs a handful of
+declarations, because all lowering logic is shared and only per-op 'flavours'
+differ (paper Sec. IV, 'a backend is ≤3 kLOC').
+
+Everything here goes through the public dispatch table — ``register_backend``
+plus ``register_impl`` — with **zero edits to core.executor**:
+
+  * its own :class:`HardwareSpec` (host memory hierarchy, no MXU),
+  * (out,in) Linear weight layout and NCHW convs (paper: fastest on CPUs),
+  * DFP fusion groups fall back to the reference 'compose' flavour (XLA
+    fuses the chain — the vendor-stack path; no 'pallas' capability),
+  * two tier-0 overrides showing per-op flavour election: a BLAS-shaped
+    Linear (explicit (out,in) contraction) and an im2col-free NCHW conv.
+
+All overrides are numerically identical to the reference tier (the parity
+test pins host_cpu vs xla to atol 1e-5)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ir import Node, OpKind
+from .registry import (HOST_CPU, Backend, register_backend, register_impl)
+
+Array = jax.Array
+
+
+host_cpu = register_backend(Backend(
+    name="host_cpu",
+    interpret=False,
+    hw=HOST_CPU,
+    linear_weight_layout="oi",   # paper: (out,in) fastest on CPUs
+    conv_layout="nchw",
+    capabilities=frozenset({"xla"}),   # no Pallas: DFP groups compose
+))
+
+
+def _linear_oi(n: Node, vals: Sequence[Array], backend: Backend) -> Array:
+    """BLAS-shaped Linear: keep weights (out,in) and contract x @ W^T, the
+    GEMM orientation host BLAS libraries prefer (paper Sec. III-A)."""
+    x, w = vals[0], vals[1]
+    if w.shape[0] != n.attrs["out_features"]:
+        w = w.T                       # graph stored (in,out): restore (out,in)
+    y = x @ w.T
+    if len(vals) > 2 and vals[2] is not None:
+        y = y + vals[2]
+    return y
+
+
+def _conv2d_nchw(n: Node, vals: Sequence[Array], backend: Backend) -> Array:
+    """NCHW conv with explicit dimension numbers — the layout host conv
+    libraries (DNNL in the paper's X86 backend) default to."""
+    x, w = vals[0], vals[1]
+    stride = n.attrs.get("stride", 1)
+    padding = n.attrs.get("padding", 0)
+    strides = (stride, stride) if isinstance(stride, int) else stride
+    pads = ((padding, padding), (padding, padding)) \
+        if isinstance(padding, int) else padding
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=strides, padding=pads,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=n.attrs.get("groups", 1))
+    if len(vals) > 2 and vals[2] is not None:
+        y = y + vals[2][None, :, None, None]
+    return y
+
+
+register_impl("host_cpu", OpKind.LINEAR, _linear_oi,
+              name="host_cpu.linear_oi",
+              supports=lambda n: len(n.inputs) >= 2)
+register_impl("host_cpu", OpKind.CONV2D, _conv2d_nchw,
+              name="host_cpu.conv2d_nchw",
+              supports=lambda n: len(n.spec.shape) == 4)

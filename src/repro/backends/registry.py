@@ -1,33 +1,33 @@
 """SOL device backends (Sec. IV of the paper).
 
-A backend is a small table: per-op implementations for the two optimizing
-modules plus layout preferences.  The paper's point — that a backend is ≤3 kLOC
-because DFP codegen is shared and only 'flavours' differ — maps here to:
-backends share all lowering logic in ``core.executor`` and only override
+The paper's point — that a backend is ≤3 kLOC because DFP codegen is shared
+and only per-op 'flavours' differ — is realised here as a **per-op dispatch
+table with capability-based fallback**.  A backend no longer carries static
+``dfp_impl``/``dnn_impl`` strings; instead each (backend, OpKind) pair maps to
+a list of :class:`Impl` entries and the executor resolves ``node → impl``
+through a documented fallback chain:
 
-  * ``dfp_impl``   — how a DFP fusion group is executed
-                     ('compose' = XLA fusion; 'pallas' = the dfp_fused kernel,
-                     interpret-mode on CPU, compiled on real TPU),
-  * ``dnn_impl``   — how Linear/Conv are executed (jnp.dot_general einsum vs
-                     the Pallas matmul kernel),
-  * layout preferences (the paper: Linear weights (out,in) on CPU but
-    (in,out) on SX-Aurora; here: einsum operand order / conv layouts),
-  * hardware constants used by the cost model / roofline.
+  tier 0  backend-specific kernel   (``register_impl(backend, op, fn)``)
+  tier 1  shared Pallas kernel      (``register_shared_impl`` — admitted only
+                                     when the impl's ``requires`` capabilities
+                                     are a subset of the backend's)
+  tier 2  XLA/jnp reference         (``register_reference_impl`` — always
+                                     available; registered by core.executor)
 
-Backends:
-  ``xla``              — pure jnp; runs anywhere; the dry-run/production path
-                         (XLA:TPU does its own fusion — this is the DNN-library
-                         analogue of "use the vendor stack").
-  ``pallas_interpret`` — TPU Pallas kernels executed with interpret=True on
-                         CPU; used for kernel validation in this container.
-  ``pallas_tpu``       — TPU Pallas kernels, compiled (requires real TPU).
+Adding a device backend therefore means: one ``register_backend`` call with a
+:class:`HardwareSpec`, plus optional ``register_impl`` overrides — and **zero
+edits to core.executor** (see ``backends/host_cpu.py`` for the proof).
+
+Backends also keep the paper's per-device layout preferences (Linear weights
+(out,in) on CPUs vs (in,out) on the long-vector machine; NCHW vs NHWC convs)
+and the hardware constants the cost model / roofline uses.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from ..core.ir import Module, Node, OpKind
+from ..core.ir import Node, OpKind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +41,23 @@ class HardwareSpec:
     mxu_dim: int = 128            # systolic array tile
     lanes: int = 128              # VPU lane count
     sublanes: int = 8
+
+    # roofline terms — shared by the implementation-election pass
+    # (core.passes), benchmarks/roofline.py and launch/dryrun.py
+    def compute_s(self, flops: float) -> float:
+        return flops / self.peak_flops_bf16
+
+    def memory_s(self, nbytes: float) -> float:
+        return nbytes / self.hbm_bandwidth
+
+    def collective_s(self, nbytes: float) -> float:
+        return nbytes / self.ici_bandwidth
+
+    def roofline_s(self, flops: float, nbytes: float,
+                   ici_bytes: float = 0.0) -> float:
+        """Time lower bound: the dominant of compute / memory / interconnect."""
+        return max(self.compute_s(flops), self.memory_s(nbytes),
+                   self.collective_s(ici_bytes))
 
 
 TPU_V5E = HardwareSpec(
@@ -59,19 +76,172 @@ HOST_CPU = HardwareSpec(
     ici_bandwidth=10e9,
     hbm_bytes=64 * 1024 ** 3,
     vmem_bytes=32 * 1024 ** 2,   # ~LLC slice; DFP cache-residency analogue
+    mxu_dim=16,                  # AVX-512-ish tile, no systolic array
+    lanes=16,
+    sublanes=1,
 )
 
+
+# ---------------------------------------------------------------------------
+# per-op implementations
+# ---------------------------------------------------------------------------
+
+# fn(node, vals, backend) -> Array; vals are the lowered inputs of the node
+# (for FUSED nodes: the side inputs, in node.inputs order).
+ImplFn = Callable[[Node, Sequence[Any], "Backend"], Any]
+
+TIER_BACKEND = 0      # backend-specific kernel
+TIER_SHARED = 1       # shared Pallas kernel (capability-gated)
+TIER_REFERENCE = 2    # XLA/jnp reference lowering
+
+
+@dataclasses.dataclass(frozen=True)
+class Impl:
+    """One implementation 'flavour' of an op (the paper's per-device kernel
+    choice, e.g. Listing 3's AveragePooling variants)."""
+
+    name: str                                    # e.g. "pallas.dfp_fused"
+    op: OpKind
+    fn: ImplFn
+    tier: int
+    requires: frozenset = frozenset()            # backend capabilities needed
+    supports: Optional[Callable[[Node], bool]] = None   # per-node capability
+    backend: Optional[str] = None                # tier-0 owner; None = any
+    # memory behaviour for the roofline cost model: 'streamed' impls touch
+    # HBM once per input/output (depth-first); 'roundtrip' impls materialize
+    # every intermediate (op-at-a-time composition).
+    memory: str = "streamed"
+
+    def admissible(self, backend: "Backend", node: Node) -> bool:
+        if self.backend is not None and self.backend != backend.name:
+            return False    # another backend's private kernel
+        if not self.requires <= backend.capabilities:
+            return False
+        if self.supports is not None and not self.supports(node):
+            return False
+        return True
+
+
+_BACKEND_IMPLS: Dict[Tuple[str, OpKind], List[Impl]] = {}
+_SHARED_IMPLS: Dict[OpKind, List[Impl]] = {}
+_REFERENCE_IMPLS: Dict[OpKind, Impl] = {}
+_IMPLS_BY_NAME: Dict[str, Impl] = {}
+
+
+def _index(impl: Impl) -> Impl:
+    _IMPLS_BY_NAME[impl.name] = impl
+    return impl
+
+
+def register_impl(backend: str, op: OpKind, fn: ImplFn, *,
+                  name: Optional[str] = None,
+                  supports: Optional[Callable[[Node], bool]] = None,
+                  memory: str = "streamed") -> Impl:
+    """Register a backend-specific implementation (tier 0).  Newest wins
+    within the tier, so a later registration overrides an earlier one."""
+    impl = _index(Impl(name or f"{backend}.{op.value}", op, fn, TIER_BACKEND,
+                       supports=supports, backend=backend, memory=memory))
+    _BACKEND_IMPLS.setdefault((backend, op), []).insert(0, impl)
+    return impl
+
+
+def register_shared_impl(op: OpKind, fn: ImplFn, *, name: str,
+                         requires: Sequence[str] = (),
+                         supports: Optional[Callable[[Node], bool]] = None,
+                         memory: str = "streamed") -> Impl:
+    """Register a shared kernel (tier 1), admitted for any backend whose
+    capabilities cover ``requires``."""
+    impl = _index(Impl(name, op, fn, TIER_SHARED,
+                       requires=frozenset(requires), supports=supports,
+                       memory=memory))
+    _SHARED_IMPLS.setdefault(op, []).insert(0, impl)
+    return impl
+
+
+def register_reference_impl(op: OpKind, fn: ImplFn, *,
+                            name: Optional[str] = None,
+                            memory: str = "streamed") -> Impl:
+    """Register the always-available XLA/jnp reference (tier 2)."""
+    impl = _index(Impl(name or f"ref.{op.value}", op, fn, TIER_REFERENCE,
+                       memory=memory))
+    _REFERENCE_IMPLS[op] = impl
+    return impl
+
+
+def get_impl(name: str) -> Optional[Impl]:
+    _load_entry_points()
+    return _IMPLS_BY_NAME.get(name)
+
+
+_ENTRY_POINTS_STATE = "unloaded"     # unloaded | loading | loaded
+
+
+def _load_entry_points() -> None:
+    """Import the modules that populate the dispatch table: the executor's
+    reference lowerings and the five kernel entry points (each ops.py
+    registers its own impls at import).  A failed import resets the state so
+    the real error resurfaces on the next dispatch call instead of leaving a
+    silently half-populated table."""
+    global _ENTRY_POINTS_STATE
+    if _ENTRY_POINTS_STATE != "unloaded":
+        return
+    _ENTRY_POINTS_STATE = "loading"
+    try:
+        from ..core import executor
+        executor._register_reference_impls()
+        from ..kernels.avgpool import ops as _a              # noqa: F401
+        from ..kernels.dfp_fused import ops as _d            # noqa: F401
+        from ..kernels.flash_attention import ops as _f      # noqa: F401
+        from ..kernels.rglru_scan import ops as _g           # noqa: F401
+        from ..kernels.rwkv6_scan import ops as _r           # noqa: F401
+    except BaseException:
+        _ENTRY_POINTS_STATE = "unloaded"
+        raise
+    _ENTRY_POINTS_STATE = "loaded"
+
+
+def candidates(backend: "Backend", node: Node) -> List[Impl]:
+    """All admissible impls for (backend, node) in fallback-chain order:
+    backend-specific → shared → reference."""
+    _load_entry_points()
+    out: List[Impl] = []
+    for impl in _BACKEND_IMPLS.get((backend.name, node.op), []):
+        if impl.admissible(backend, node):
+            out.append(impl)
+    for impl in _SHARED_IMPLS.get(node.op, []):
+        if impl.admissible(backend, node):
+            out.append(impl)
+    ref = _REFERENCE_IMPLS.get(node.op)
+    if ref is not None and ref.admissible(backend, node):
+        out.append(ref)
+    return out
+
+
+def resolve(backend: "Backend", node: Node) -> Impl:
+    """First admissible impl in the fallback chain; the executor uses this
+    when the election pass did not annotate the node."""
+    cands = candidates(backend, node)
+    if not cands:
+        raise NotImplementedError(
+            f"no implementation of {node.op} for backend {backend.name!r}")
+    return cands[0]
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
     name: str
-    dfp_impl: str                 # 'compose' | 'pallas'
-    dnn_impl: str                 # 'einsum'  | 'pallas'
     interpret: bool               # Pallas interpret mode
     hw: HardwareSpec
     # layout preferences — the paper's per-device layout election
     linear_weight_layout: str     # 'oi' (out,in) vs 'io' (in,out)
     conv_layout: str              # 'nchw' vs 'nhwc'
+    # capability set gating shared impls ('pallas' admits the Pallas kernels,
+    # 'mxu' the systolic-array matmul path, ...)
+    capabilities: frozenset = frozenset({"xla"})
 
     def preferred_layout(self, node: Node) -> str:
         if node.op in (OpKind.LINEAR, OpKind.MATMUL):
@@ -80,10 +250,11 @@ class Backend:
             return self.conv_layout
         return self.conv_layout  # DFP ops follow the surrounding data layout
 
-    def impl_for(self, node: Node) -> str:
-        if node.module is Module.DNN:
-            return self.dnn_impl
-        return self.dfp_impl
+    def candidates(self, node: Node) -> List[Impl]:
+        return candidates(self, node)
+
+    def resolve(self, node: Node) -> Impl:
+        return resolve(self, node)
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -108,32 +279,29 @@ def available_backends() -> Dict[str, Backend]:
 # the paper's X86 backend (ISPC + DNNL) in role: 'vendor stack does the work'.
 register_backend(Backend(
     name="xla",
-    dfp_impl="compose",
-    dnn_impl="einsum",
     interpret=False,
     hw=TPU_V5E,                 # production target of the lowered program
     linear_weight_layout="oi",  # paper: (out,in) fastest on CPUs
     conv_layout="nchw",
+    capabilities=frozenset({"xla"}),
 ))
 
 # TPU Pallas kernels validated on CPU via interpret mode.
 register_backend(Backend(
     name="pallas_interpret",
-    dfp_impl="pallas",
-    dnn_impl="einsum",          # MXU matmul stays on XLA in interpret mode
     interpret=True,
     hw=TPU_V5E,
     linear_weight_layout="io",  # paper: (in,out) on the long-vector machine;
     conv_layout="nhwc",         # TPU prefers minor-most channels (lane dim)
+    capabilities=frozenset({"xla", "pallas"}),
 ))
 
 # Real-TPU backend: same kernels, compiled.
 register_backend(Backend(
     name="pallas_tpu",
-    dfp_impl="pallas",
-    dnn_impl="pallas",
     interpret=False,
     hw=TPU_V5E,
     linear_weight_layout="io",
     conv_layout="nhwc",
+    capabilities=frozenset({"xla", "pallas", "mxu"}),
 ))

@@ -2,10 +2,13 @@
 and compiles it for the target devices').
 
 On JAX the 'generated code' is a closed-over Python function lowered through
-jit; DFP fusion groups either compose (XLA fuses them — the CPU/'vendor stack'
-flavour) or dispatch to the ``kernels.dfp_fused`` Pallas kernel (the TPU
-flavour, interpret-mode on CPU).  DNN nodes go to dot_general/conv in the
-operand order elected by the layout pass.
+jit.  Per-node implementations are resolved through the backend dispatch table
+(``backends.registry``): the election pass annotates ``node.impl`` with the
+chosen flavour, and anything unannotated falls back along the chain
+backend-specific kernel → shared Pallas kernel → the XLA/jnp reference
+lowerings defined below.  This module registers the **reference tier** for
+every op it can lower — it knows nothing about which backends exist, so new
+backends plug in without touching this file.
 """
 from __future__ import annotations
 
@@ -16,22 +19,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from typing import TYPE_CHECKING
-
 from .ir import Graph, Module, Node, OpKind
-
-if TYPE_CHECKING:    # avoid circular import (backends.registry imports core.ir)
-    from ..backends.registry import Backend
+from ..backends import registry
 
 Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
-# individual op lowerings
+# individual op lowerings (the reference tier)
 # ---------------------------------------------------------------------------
 
 def _lower_linear(n: Node, x: Array, w: Array, b: Array | None,
-                  backend: "Backend") -> Array:
+                  backend: "registry.Backend") -> Array:
     # layout pass decides operand order: 'oi' keeps (out,in) and contracts on
     # the last dim of both; 'io' stores (in,out) — fewer transposes for
     # backends whose matmul wants the reduction dim major (paper Sec. III-A).
@@ -46,7 +45,7 @@ def _lower_linear(n: Node, x: Array, w: Array, b: Array | None,
 
 
 def _lower_conv2d(n: Node, x: Array, w: Array, b: Array | None,
-                  backend: "Backend") -> Array:
+                  backend: "registry.Backend") -> Array:
     stride = n.attrs.get("stride", 1)
     padding = n.attrs.get("padding", 0)
     groups = n.attrs.get("groups", 1)
@@ -83,7 +82,8 @@ _ELEMENTWISE: Dict[OpKind, Callable[..., Array]] = {
 }
 
 
-def _lower_node(n: Node, vals: List[Array], backend: "Backend") -> Array:
+def _lower_node(n: Node, vals: List[Array], backend: "registry.Backend"
+                ) -> Array:
     op = n.op
     if op in _ELEMENTWISE:
         return _ELEMENTWISE[op](vals[0])
@@ -156,61 +156,74 @@ def _lower_node(n: Node, vals: List[Array], backend: "Backend") -> Array:
 
 
 # ---------------------------------------------------------------------------
-# DFP fusion-group lowering
+# DFP fusion-group reference: compose — under jit, XLA fuses the chain (the
+# 'vendor stack' flavour of DFP); numerically identical to the Pallas kernel.
 # ---------------------------------------------------------------------------
 
-# ops the Pallas dfp_fused kernel supports as a single VMEM-resident program
-_DFP_KERNEL_OPS = {
-    OpKind.RELU, OpKind.GELU, OpKind.SILU, OpKind.SIGMOID, OpKind.TANH,
-    OpKind.EXP, OpKind.ADD, OpKind.SUB, OpKind.MUL, OpKind.DIV,
-    OpKind.BIAS_ADD, OpKind.SCALE, OpKind.SOFTCAP, OpKind.RMSNORM,
-    OpKind.LAYERNORM, OpKind.IDENTITY, OpKind.DROPOUT,
-}
+def compose_fused(n: Node, vals: Sequence[Array],
+                  backend: "registry.Backend") -> Array:
+    """Lower a FUSED node op-at-a-time; vals are the group's side inputs in
+    node.inputs order.  Also the runtime fallback of the Pallas DFP kernel.
 
-
-def _lower_fused(n: Node, env: Dict[int, Array], backend: "Backend") -> Array:
-    body = n.body
-    kernel_ok = (backend.dfp_impl == "pallas"
-                 and all(b.op in _DFP_KERNEL_OPS for b in body)
-                 and all(b.spec.shape == body[-1].spec.shape or
-                         b.op in (OpKind.BIAS_ADD,) for b in body))
-    if kernel_ok:
-        from ..kernels.dfp_fused import ops as dfp_ops
-        program, operands = _compile_dfp_program(n, env)
-        if program is not None:
-            return dfp_ops.dfp_fused(program, operands,
-                                     interpret=backend.interpret)
-    # fallback: compose — under jit, XLA fuses the chain (the 'vendor stack'
-    # flavour of DFP); numerically identical to the kernel path.
-    local: Dict[int, Array] = dict(env)
+    Body ops resolve through the dispatch table too, so a backend's tier-0
+    override of a fusable op (say a custom GELU) still applies when the op
+    sits inside a composed group."""
+    local: Dict[int, Array] = {id(i): v for i, v in zip(n.inputs, vals)}
     out = None
-    for b in body:
-        vals = [local[id(i)] for i in b.inputs]
-        out = _lower_node(b, vals, backend)
+    for b in n.body:
+        body_vals = [local[id(i)] for i in b.inputs]
+        out = _impl_for(b, backend).fn(b, body_vals, backend)
         local[id(b)] = out
     return out
 
 
-def _compile_dfp_program(n: Node, env: Dict[int, Array]):
-    """Translate a fusion-group body into the dfp_fused kernel's static
-    program encoding.  Returns (program, operands) or (None, None) when the
-    chain has shapes the kernel does not handle (then we compose instead)."""
-    from ..kernels.dfp_fused.program import encode_program
-    try:
-        return encode_program(n, env)
-    except NotImplementedError:
-        return None, None
+# ---------------------------------------------------------------------------
+# reference-tier registration — invoked by registry._load_entry_points(), not
+# at import time, so the executor↔registry import cycle stays one-directional.
+# ---------------------------------------------------------------------------
+
+_REFERENCE_OPS = (
+    list(_ELEMENTWISE)
+    + [OpKind.ADD, OpKind.SUB, OpKind.MUL, OpKind.DIV, OpKind.BIAS_ADD,
+       OpKind.SCALE, OpKind.SOFTCAP, OpKind.MAXPOOL, OpKind.AVGPOOL,
+       OpKind.GLOBALPOOL, OpKind.LAYERNORM, OpKind.RMSNORM, OpKind.BATCHNORM,
+       OpKind.SOFTMAX, OpKind.DROPOUT, OpKind.FLATTEN, OpKind.RESHAPE,
+       OpKind.TRANSPOSE, OpKind.REORDER, OpKind.LINEAR, OpKind.MATMUL,
+       OpKind.CONV2D]
+)
+
+
+def _register_reference_impls() -> None:
+    for _op in _REFERENCE_OPS:
+        registry.register_reference_impl(_op, _lower_node)
+    registry.register_reference_impl(OpKind.FUSED, compose_fused,
+                                     name="ref.compose", memory="roundtrip")
 
 
 # ---------------------------------------------------------------------------
 # graph → callable
 # ---------------------------------------------------------------------------
 
-def lower_graph(g: Graph, backend: "Backend") -> Callable[..., Any]:
+def _impl_for(n: Node, backend: "registry.Backend") -> registry.Impl:
+    """Honour the election pass's annotation when it is still admissible for
+    this backend, else resolve through the fallback chain."""
+    if n.impl:
+        impl = registry.get_impl(n.impl)
+        if impl is not None and impl.op is n.op \
+                and impl.admissible(backend, n):
+            return impl
+    return registry.resolve(backend, n)
+
+
+def lower_graph(g: Graph, backend: "registry.Backend") -> Callable[..., Any]:
     """Return fn(params: dict, *inputs) -> outputs evaluating the graph."""
     order = g.topo()
     input_ids = [id(i) for i in g.inputs]
     param_items = sorted(g.params.items())
+    impls: Dict[int, registry.Impl] = {
+        id(n): _impl_for(n, backend) for n in order
+        if n.op not in (OpKind.INPUT, OpKind.PARAM, OpKind.OUTPUT)
+    }
 
     def fn(params: Dict[str, Array], *inputs: Array):
         env: Dict[int, Array] = {}
@@ -221,13 +234,10 @@ def lower_graph(g: Graph, backend: "Backend") -> Callable[..., Any]:
         for n in order:
             if id(n) in env:
                 continue
-            if n.op is OpKind.FUSED:
-                env[id(n)] = _lower_fused(n, env, backend)
-            elif n.op in (OpKind.INPUT, OpKind.PARAM):
+            if n.op in (OpKind.INPUT, OpKind.PARAM):
                 raise ValueError(f"unbound source node {n}")
-            else:
-                vals = [env[id(i)] for i in n.inputs]
-                env[id(n)] = _lower_node(n, vals, backend)
+            vals = [env[id(i)] for i in n.inputs]
+            env[id(n)] = impls[id(n)].fn(n, vals, backend)
         outs = tuple(env[id(o)] for o in g.outputs)
         return outs[0] if len(outs) == 1 else outs
 

@@ -86,6 +86,9 @@ class OpKind(enum.Enum):
     LINEAR = "linear"
     CONV2D = "conv2d"
     MATMUL = "matmul"
+    ATTENTION = "attention"       # (q, k, v) scaled-dot-product attention
+    RGLRU_SCAN = "rglru_scan"     # gated linear recurrence h_t = a·h + b
+    RWKV6_SCAN = "rwkv6_scan"     # RWKV6 WKV recurrence
     # DFP-module ops (memory-bound → fused depth-first code)
     RELU = "relu"
     GELU = "gelu"
@@ -149,6 +152,8 @@ class Node:
     name: str = ""
     module: Optional[Module] = None          # set by assign_modules pass
     layout: Optional[str] = None             # set by layout pass
+    impl: Optional[str] = None               # Impl name elected by
+                                             # passes.elect_implementations
     # for FUSED nodes: the ordered list of original nodes in the group
     body: List["Node"] = dataclasses.field(default_factory=list)
 
@@ -229,6 +234,7 @@ class Graph:
             "dnn": sum(1 for n in order if n.module is Module.DNN),
             "fused_groups": sum(1 for n in order if n.op is OpKind.FUSED),
             "reorders": sum(1 for n in order if n.op is OpKind.REORDER),
+            "elected": sum(1 for n in order if n.impl is not None),
         }
 
 

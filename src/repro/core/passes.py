@@ -18,12 +18,18 @@ Pipeline (mirrors the paper's order):
                              weights (out,in) on CPU-like backends vs (in,out)
                              on long-vector backends), inserting the minimal
                              number of REORDER nodes.
+  5. ``elect_implementations`` — per-node implementation election: each node's
+                             admissible impls (backend kernel → shared Pallas
+                             kernel → XLA reference, from the backend dispatch
+                             table) are costed with the backend's
+                             ``HardwareSpec`` roofline terms and the cheapest
+                             wins; the choice is recorded on ``node.impl``.
 
 Each pass returns the (mutated) graph so they compose with ``functools.reduce``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .ir import (DFP_FUSABLE, Graph, Module, Node, OpKind, TensorSpec)
 
@@ -198,6 +204,77 @@ def assign_layouts(g: Graph, backend: "object") -> Graph:
 
 
 # ----------------------------------------------------------------------------
+# 5. implementation election (per-node 'flavour' choice, paper Sec. IV)
+# ----------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4,
+                "int8": 1, "float64": 8}
+
+# nominal FLOPs per element for the memory-bound DFP ops; the election only
+# needs relative magnitudes, not exact instruction counts
+_EW_FLOPS = 5.0
+
+
+def _node_cost_terms(n: Node) -> Tuple[float, float, float]:
+    """Rough roofline terms for one node: (flops, streamed_bytes,
+    roundtrip_bytes).  'streamed' assumes inputs and the output cross HBM
+    exactly once (a depth-first kernel); 'roundtrip' charges every
+    intermediate of a fusion group a full write+read (op-at-a-time
+    composition).  For non-FUSED nodes the two coincide."""
+    eltsize = _DTYPE_BYTES.get(n.spec.dtype, 4)
+    in_bytes = sum(i.spec.size for i in n.inputs) * eltsize
+    out_bytes = n.spec.size * eltsize
+    streamed = float(in_bytes + out_bytes)
+
+    if n.op in (OpKind.LINEAR, OpKind.MATMUL):
+        k = n.inputs[0].spec.shape[-1] if n.inputs[0].spec.shape else 1
+        return 2.0 * n.spec.size * k, streamed, streamed
+    if n.op is OpKind.CONV2D:
+        w = n.inputs[1].spec
+        out_c = n.attrs.get("out_channels") or (w.shape[0] if w.shape else 1)
+        taps = w.size / max(out_c, 1)       # in_ch/groups · kh · kw
+        return 2.0 * n.spec.size * taps, streamed, streamed
+    if n.op is OpKind.FUSED:
+        flops = sum(b.spec.size for b in n.body) * _EW_FLOPS
+        roundtrip = float(in_bytes) + sum(
+            2.0 * b.spec.size * eltsize for b in n.body)
+        return flops, streamed, roundtrip
+    return n.spec.size * _EW_FLOPS, streamed, streamed
+
+
+def elect_implementations(g: Graph, backend: "object") -> Graph:
+    """Cost-based per-node impl election over the backend dispatch table.
+
+    Replaces the old global 'flavour' flags: every node is annotated with the
+    impl whose roofline time (``HardwareSpec.roofline_s``) is lowest among the
+    admissible candidates; ties break toward the more specific tier.  The
+    executor honours ``node.impl`` and falls back along the chain when the
+    annotation is absent or inadmissible (e.g. the graph is re-lowered on a
+    different backend)."""
+    from ..backends import registry as R
+
+    elections: Dict[str, int] = {}
+    for n in g.topo():
+        if n.op in (OpKind.INPUT, OpKind.PARAM, OpKind.OUTPUT):
+            continue
+        cands = R.candidates(backend, n)
+        if not cands:
+            raise NotImplementedError(
+                f"no implementation of {n.op} for backend {backend.name!r}")
+        flops, streamed, roundtrip = _node_cost_terms(n)
+
+        def cost(impl: "R.Impl") -> Tuple[float, int]:
+            nbytes = roundtrip if impl.memory == "roundtrip" else streamed
+            return (backend.hw.roofline_s(flops, nbytes), impl.tier)
+
+        best = min(cands, key=cost)
+        n.impl = best.name
+        elections[best.name] = elections.get(best.name, 0) + 1
+    g.elections = elections
+    return g
+
+
+# ----------------------------------------------------------------------------
 # pipeline
 # ----------------------------------------------------------------------------
 
@@ -210,4 +287,5 @@ def run_pipeline(g: Graph, backend: "object",
     g = assign_modules(g)
     g = form_fusion_groups(g)
     g = assign_layouts(g, backend)
+    g = elect_implementations(g, backend)
     return g

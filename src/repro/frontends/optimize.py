@@ -16,7 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..backends import get_backend
+from ..backends import Backend, get_backend
 from ..core import passes
 from ..core.executor import lower_graph
 from . import nn
@@ -64,12 +64,17 @@ class SolModel(nn.Module):
     def stats(self) -> Dict[str, int]:
         return self.graph.stats()
 
+    def impl_report(self) -> Dict[str, int]:
+        """Histogram of elected implementations (impl name → node count) —
+        the per-op flavour choices the election pass made for this backend."""
+        return dict(getattr(self.graph, "elections", {}))
+
 
 def optimize(model: nn.Module, input_shape: Tuple[int, ...], *,
-             backend: str = "xla", training: bool = False,
+             backend: str | Backend = "xla", training: bool = False,
              dtype: str = "float32") -> SolModel:
     """Extract → optimize → codegen → inject.  ≤1 line for the user."""
-    bk = get_backend(backend)
+    bk = backend if isinstance(backend, Backend) else get_backend(backend)
     graph = extract(model, input_shape, dtype)
     graph = passes.run_pipeline(graph, bk, training=training)
     raw_fn = lower_graph(graph, bk)

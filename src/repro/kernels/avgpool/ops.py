@@ -1,9 +1,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 
+from ...backends import registry
+from ...core.ir import Node, OpKind
 from .kernel import avgpool_call
 
 
@@ -12,3 +15,22 @@ def avgpool(x: jax.Array, kh: int = 3, kw: int = 3, *,
             interpret: bool = False) -> jax.Array:
     """Paper Listing-3 AveragePooling (NCHW, stride 1, VALID)."""
     return avgpool_call(x, kh, kw, interpret=interpret)
+
+
+def _supports(n: Node) -> bool:
+    # the Pallas kernel covers rank-4 NCHW, stride 1, VALID
+    k = n.attrs.get("kernel", 2)
+    s = n.attrs.get("stride", k)
+    return len(n.spec.shape) == 4 and s in (1, (1, 1))
+
+
+def _avgpool_impl(n: Node, vals: Sequence[jax.Array],
+                  backend: "registry.Backend") -> jax.Array:
+    k = n.attrs.get("kernel", 2)
+    kh, kw = (k, k) if isinstance(k, int) else k
+    return avgpool(vals[0], kh, kw, interpret=backend.interpret)
+
+
+registry.register_shared_impl(
+    OpKind.AVGPOOL, _avgpool_impl, name="pallas.avgpool",
+    requires=("pallas",), supports=_supports)

@@ -1,12 +1,27 @@
-"""Public wrapper for the DFP fused kernel."""
+"""Public wrapper for the DFP fused kernel + its dispatch-table entry.
+
+Registered as the shared-tier impl of ``OpKind.FUSED``: any backend with the
+'pallas' capability lowers DFP fusion groups to one VMEM-resident Pallas
+program; everyone else falls back to the reference tier, which composes
+op-at-a-time (XLA then fuses the chain — the 'vendor stack' flavour)."""
 from __future__ import annotations
 
 from typing import Sequence
 
 import jax
 
+from ...backends import registry
+from ...core.ir import Node, OpKind
 from .kernel import dfp_fused_call
 from .program import Program
+
+# ops the Pallas dfp_fused kernel supports as a single VMEM-resident program
+DFP_KERNEL_OPS = {
+    OpKind.RELU, OpKind.GELU, OpKind.SILU, OpKind.SIGMOID, OpKind.TANH,
+    OpKind.EXP, OpKind.ADD, OpKind.SUB, OpKind.MUL, OpKind.DIV,
+    OpKind.BIAS_ADD, OpKind.SCALE, OpKind.SOFTCAP, OpKind.RMSNORM,
+    OpKind.LAYERNORM, OpKind.IDENTITY, OpKind.DROPOUT,
+}
 
 
 def dfp_fused(prog: Program, operands: Sequence[jax.Array],
@@ -19,3 +34,30 @@ def dfp_fused(prog: Program, operands: Sequence[jax.Array],
     out_dtype = full[0].dtype
     return dfp_fused_call(prog, list(operands), out_shape, out_dtype,
                           interpret=interpret)
+
+
+def _supports_chain(n: Node) -> bool:
+    body = n.body
+    return (bool(body)
+            and all(b.op in DFP_KERNEL_OPS for b in body)
+            and all(b.spec.shape == body[-1].spec.shape
+                    or b.op is OpKind.BIAS_ADD for b in body))
+
+
+def _dfp_fused_impl(n: Node, vals: Sequence[jax.Array],
+                    backend: "registry.Backend") -> jax.Array:
+    from ...core.executor import compose_fused
+    from .program import encode_program
+    env = {id(i): v for i, v in zip(n.inputs, vals)}
+    try:
+        program, operands = encode_program(n, env)
+    except NotImplementedError:
+        program = None
+    if program is None:   # shapes the kernel doesn't cover — compose instead
+        return compose_fused(n, vals, backend)
+    return dfp_fused(program, operands, interpret=backend.interpret)
+
+
+registry.register_shared_impl(
+    OpKind.FUSED, _dfp_fused_impl, name="pallas.dfp_fused",
+    requires=("pallas",), supports=_supports_chain, memory="streamed")

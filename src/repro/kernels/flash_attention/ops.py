@@ -2,10 +2,13 @@
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ...backends import registry
+from ...core.ir import Node, OpKind
 from .kernel import flash_attention_call
 
 
@@ -22,3 +25,35 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     o = flash_attention_call(qt, kt, vt, causal=causal, window=window,
                              cap=cap, bq=bq, bk=bk, interpret=interpret)
     return o.transpose(0, 2, 1, 3)
+
+
+# -- dispatch-table entries: OpKind.ATTENTION over (q, k, v) nodes -----------
+
+def _attrs(n: Node) -> dict:
+    return dict(causal=n.attrs.get("causal", True),
+                window=n.attrs.get("window", 0),
+                cap=n.attrs.get("cap", 0.0))
+
+
+def _attention_pallas_impl(n: Node, vals: Sequence[jax.Array],
+                           backend: "registry.Backend") -> jax.Array:
+    q, k, v = vals
+    return flash_attention(q, k, v, interpret=backend.interpret, **_attrs(n))
+
+
+def _attention_ref_impl(n: Node, vals: Sequence[jax.Array],
+                        backend: "registry.Backend") -> jax.Array:
+    from .ref import flash_attention_ref
+    q, k, v = vals
+    o = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), **_attrs(n))
+    return o.transpose(0, 2, 1, 3)
+
+
+registry.register_shared_impl(
+    OpKind.ATTENTION, _attention_pallas_impl, name="pallas.flash_attention",
+    requires=("pallas",),
+    supports=lambda n: len(n.spec.shape) == 4)
+registry.register_reference_impl(
+    OpKind.ATTENTION, _attention_ref_impl, name="ref.attention",
+    memory="roundtrip")   # materializes the S×S score matrix

@@ -1,9 +1,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 
+from ...backends import registry
+from ...core.ir import Node, OpKind
 from .kernel import rglru_scan_call
 
 
@@ -13,3 +16,26 @@ def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
     """Gated linear recurrence h_t = a_t·h_{t-1} + b_t.
     a, b: (B, T, D); h0: (B, D) → (h: (B,T,D), h_last: (B,D))."""
     return rglru_scan_call(a, b, h0, bd=bd, interpret=interpret)
+
+
+# -- dispatch-table entries: OpKind.RGLRU_SCAN over (a, b, h0) nodes;
+#    the graph-level op yields the full hidden sequence h.
+
+def _rglru_pallas_impl(n: Node, vals: Sequence[jax.Array],
+                       backend: "registry.Backend") -> jax.Array:
+    a, b, h0 = vals
+    return rglru_scan(a, b, h0, interpret=backend.interpret)[0]
+
+
+def _rglru_ref_impl(n: Node, vals: Sequence[jax.Array],
+                    backend: "registry.Backend") -> jax.Array:
+    from .ref import rglru_scan_ref
+    a, b, h0 = vals
+    return rglru_scan_ref(a, b, h0)[0]
+
+
+registry.register_shared_impl(
+    OpKind.RGLRU_SCAN, _rglru_pallas_impl, name="pallas.rglru_scan",
+    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 3)
+registry.register_reference_impl(
+    OpKind.RGLRU_SCAN, _rglru_ref_impl, name="ref.rglru_scan")

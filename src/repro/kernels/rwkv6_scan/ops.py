@@ -1,9 +1,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 
+from ...backends import registry
+from ...core.ir import Node, OpKind
 from .kernel import rwkv6_scan_call
 
 
@@ -12,3 +15,24 @@ def rwkv6_scan(r, k, v, logw, u, s0, *, interpret: bool = False):
     """RWKV6 WKV recurrence.  r,k,v,logw: (B,T,H,hd); u: (H,hd);
     s0: (B,H,hd,hd) → (o: (B,T,H,hd), s_last)."""
     return rwkv6_scan_call(r, k, v, logw, u, s0, interpret=interpret)
+
+
+# -- dispatch-table entries: OpKind.RWKV6_SCAN over (r, k, v, logw, u, s0);
+#    the graph-level op yields the per-token output o.
+
+def _rwkv6_pallas_impl(n: Node, vals: Sequence[jax.Array],
+                       backend: "registry.Backend") -> jax.Array:
+    return rwkv6_scan(*vals, interpret=backend.interpret)[0]
+
+
+def _rwkv6_ref_impl(n: Node, vals: Sequence[jax.Array],
+                    backend: "registry.Backend") -> jax.Array:
+    from .ref import rwkv6_scan_ref
+    return rwkv6_scan_ref(*vals)[0]
+
+
+registry.register_shared_impl(
+    OpKind.RWKV6_SCAN, _rwkv6_pallas_impl, name="pallas.rwkv6_scan",
+    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 4)
+registry.register_reference_impl(
+    OpKind.RWKV6_SCAN, _rwkv6_ref_impl, name="ref.rwkv6_scan")

@@ -22,6 +22,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from ..backends.registry import TPU_V5E
 from ..configs import ARCH_IDS, ALIASES, get_config
 from ..distributed import sharding as S
 from ..distributed.steps import (StepOptions, jit_serve_steps,
@@ -213,6 +214,13 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, results_path: Path):
         rec.update(
             status="ok",
             n_devices=int(n_dev),
+            hw=TPU_V5E.name,
+            # roofline lower bound from the shared HardwareSpec cost model
+            # (same terms the implementation-election pass uses)
+            roofline_s=TPU_V5E.roofline_s(
+                float(loop_aware["flops_per_device"]),
+                float(loop_aware["hbm_bytes_per_device"]),
+                float(loop_aware["ici_bytes_per_device"])),
             lower_s=round(t_lower, 1),
             compile_s=round(t_compile, 1),
             # loop-aware accounting (while bodies × trip count) — the

@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim.
+
+A bare environment (no ``hypothesis``) used to die at collection with
+ImportError in four test modules.  Import ``hypothesis``/``st`` from here
+instead: when the real package is present you get it unchanged; when it is
+absent, property tests degrade to individual skips (the strategy objects are
+inert placeholders and ``@hypothesis.given`` swaps the test body for a
+``pytest.skip``) while every example-based test in the module still runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Inert stand-in: every strategy constructor returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    class _Hypothesis:
+        HealthCheck = _Strategies()
+
+        @staticmethod
+        def settings(*a, **k):
+            return lambda fn: fn
+
+        @staticmethod
+        def assume(*a, **k):
+            return True
+
+        @staticmethod
+        def given(*a, **k):
+            def deco(fn):
+                # zero-arg wrapper: hides the strategy params from pytest's
+                # fixture resolution so the item collects and skips cleanly
+                def skipper():
+                    pytest.skip("hypothesis not installed")
+                skipper.__name__ = fn.__name__
+                skipper.__doc__ = fn.__doc__
+                return skipper
+            return deco
+
+    st = _Strategies()
+    hypothesis = _Hypothesis()

@@ -15,9 +15,12 @@ from repro.models.config import SHAPES
 
 
 def abstract_mesh(multi_pod=False):
-    if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+    sizes = (2, 16, 16) if multi_pod else (16, 16)
+    names = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return AbstractMesh(sizes, names)              # jax >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax 0.4.x signature
 
 
 def _axis_size(mesh, axes):

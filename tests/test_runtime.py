@@ -2,8 +2,7 @@
 (the paper's 32+32-bit encoding), packed memcopies."""
 import threading
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypo import hypothesis, st  # real hypothesis, or skip-stubs when absent
 import jax.numpy as jnp
 import numpy as np
 import pytest
