@@ -1,0 +1,88 @@
+"""Layout-election benchmark (ROADMAP item): measure the choices
+``assign_layouts`` currently asserts.
+
+Two tables, both on whatever device jax defaults to:
+
+  * Linear weight layout — 'oi' (out,in; contraction via ``...i,oi->...o``,
+    the torch/CPU-BLAS convention) vs 'io' (in,out; ``...i,io->...o``, the
+    long-vector/TPU convention the paper elects for NEC Aurora).
+  * Conv data layout — NCHW vs NHWC (minor-most channels on the lane dim).
+
+The derived column reports the measured winner and what each registered
+backend's ``preferred_layout`` would have elected, so drift between the
+model and the data is visible in every benchmark run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .paper_tables import _time
+
+
+@functools.partial(jax.jit)
+def _linear_oi(x, w):          # w: (out, in)
+    return jnp.einsum("bi,oi->bo", x, w)
+
+
+@functools.partial(jax.jit)
+def _linear_io(x, w):          # w: (in, out)
+    return jnp.einsum("bi,io->bo", x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("dn",))
+def _conv(x, w, dn):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((1, 1), (1, 1)), dimension_numbers=dn)
+
+
+def _backend_prefs(kind: str) -> str:
+    from repro.backends import available_backends
+    from repro.core import ir
+    from repro.core.ir import Node, OpKind, TensorSpec
+    if kind == "linear":
+        node = Node(OpKind.LINEAR, [ir.input_node((1, 8))],
+                    TensorSpec((1, 8)), attrs={"out_features": 8})
+    else:
+        node = Node(OpKind.CONV2D, [ir.input_node((1, 8, 8, 8))],
+                    TensorSpec((1, 8, 8, 8)), attrs={"out_channels": 8})
+    return "|".join(f"{n}={b.preferred_layout(node)}"
+                    for n, b in sorted(available_backends().items()))
+
+
+def csv_rows() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows: List[Tuple[str, float, str]] = []
+
+    for b, d_in, d_out in ((32, 1024, 1024), (8, 4096, 512)):
+        x = jnp.asarray(rng.standard_normal((b, d_in)), jnp.float32)
+        w_oi = jnp.asarray(rng.standard_normal((d_out, d_in)), jnp.float32)
+        w_io = w_oi.T
+        t_oi = _time(lambda: _linear_oi(x, w_oi))
+        t_io = _time(lambda: _linear_io(x, w_io))
+        win = "oi" if t_oi <= t_io else "io"
+        tag = f"linear_{b}x{d_in}x{d_out}"
+        rows.append((f"layout_{tag}_oi", t_oi, ""))
+        rows.append((f"layout_{tag}_io", t_io,
+                     f"faster={win};{_backend_prefs('linear')}"))
+
+    for b, c_in, c_out, hw in ((4, 32, 64, 32), (1, 64, 128, 16)):
+        x = rng.standard_normal((b, c_in, hw, hw)).astype(np.float32)
+        w = rng.standard_normal((c_out, c_in, 3, 3)).astype(np.float32)
+        x_nchw, w_oihw = jnp.asarray(x), jnp.asarray(w)
+        x_nhwc = jnp.asarray(x.transpose(0, 2, 3, 1))
+        w_hwio = jnp.asarray(w.transpose(2, 3, 1, 0))
+        t_nchw = _time(lambda: _conv(x_nchw, w_oihw,
+                                     ("NCHW", "OIHW", "NCHW")))
+        t_nhwc = _time(lambda: _conv(x_nhwc, w_hwio,
+                                     ("NHWC", "HWIO", "NHWC")))
+        win = "nchw" if t_nchw <= t_nhwc else "nhwc"
+        tag = f"conv_{b}x{c_in}to{c_out}x{hw}"
+        rows.append((f"layout_{tag}_nchw", t_nchw, ""))
+        rows.append((f"layout_{tag}_nhwc", t_nhwc,
+                     f"faster={win};{_backend_prefs('conv')}"))
+    return rows

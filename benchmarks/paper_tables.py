@@ -101,6 +101,9 @@ def inference_fig3() -> List[Tuple[str, float, str]]:
         ("mlp_B1", nn.mlp_8192(3, 2048, 2048, 1000), (1, 2048)),
         ("small_cnn_B1", nn.small_cnn(), (1, 3, 64, 64)),
         ("depthwise_cnn_B1", nn.depthwise_cnn(), (1, 3, 64, 64)),
+        # beyond-paper: sequence blocks through the pipeline (PR 2)
+        ("transformer_B1", nn.transformer_block(64, 4), (1, 64, 64)),
+        ("griffin_B1", nn.griffin_block(64), (1, 64, 64)),
     ]
     for name, model, shape in cases:
         ref, sol = _bench_pair(model, shape)

@@ -5,15 +5,21 @@ tables).  Prints ``name,us_per_call,derived`` CSV.
   inference   paper Fig. 3 left  (B=1, reference vs SOL)
   training    paper Fig. 3 right (B=16/64, reference vs SOL)
   roofline    deliverable (g): per (arch × shape) terms from the dry-run
+  layouts     oi/io Linear and NCHW/NHWC Conv timings driving assign_layouts
   serving     beyond-paper decode throughput smoke
 
-Run: PYTHONPATH=src python -m benchmarks.run [table ...]
+Run: PYTHONPATH=src python -m benchmarks.run [table ...] [--json PATH]
+
+``--json PATH`` additionally writes the rows as a JSON document (the
+``BENCH_*.json`` series CI uploads as an artifact, so the perf trajectory
+accumulates across commits).
 
 Exits non-zero if any requested table raises, so CI can gate on the smoke
 step instead of silently shipping a partial CSV.
 """
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 
@@ -31,6 +37,9 @@ def _table_rows(name: str):
     if name == "roofline":
         from . import roofline
         return roofline.csv_rows()
+    if name == "layouts":
+        from . import layouts
+        return layouts.csv_rows()
     if name == "serving":
         from . import serving
         return serving.decode_bench()
@@ -38,8 +47,18 @@ def _table_rows(name: str):
 
 
 def main() -> int:
-    which = sys.argv[1:] or ["effort", "inference", "training",
-                             "roofline", "serving"]
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            print("--json requires a path", file=sys.stderr)
+            return 2
+        argv = argv[:i] + argv[i + 2:]
+    which = argv or ["effort", "inference", "training",
+                     "roofline", "layouts", "serving"]
     rows, failed = [], []
     for name in which:
         try:
@@ -51,6 +70,16 @@ def main() -> int:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        doc = {
+            "tables": which,
+            "failed": failed,
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"[benchmarks] wrote {json_path}", file=sys.stderr)
     if failed:
         print(f"[benchmarks] failed tables: {', '.join(failed)}",
               file=sys.stderr)

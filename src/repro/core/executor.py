@@ -78,6 +78,7 @@ _ELEMENTWISE: Dict[OpKind, Callable[..., Array]] = {
     OpKind.SIGMOID: jax.nn.sigmoid,
     OpKind.TANH: jnp.tanh,
     OpKind.EXP: jnp.exp,
+    OpKind.SOFTPLUS: jax.nn.softplus,
     OpKind.IDENTITY: lambda x: x,
 }
 
@@ -103,6 +104,13 @@ def _lower_node(n: Node, vals: List[Array], backend: "registry.Backend"
         return x + b.reshape(shape)
     if op is OpKind.SCALE:
         return vals[0] * n.attrs["value"]
+    if op is OpKind.SQRT:
+        mv = n.attrs.get("min")
+        x = vals[0] if mv is None else jnp.maximum(vals[0], mv)
+        return jnp.sqrt(x)
+    if op is OpKind.TIME_SHIFT:
+        x = vals[0]
+        return jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
     if op is OpKind.SOFTCAP:
         c = n.attrs["cap"]
         return jnp.tanh(vals[0] / c) * c
@@ -185,7 +193,8 @@ def compose_fused(n: Node, vals: Sequence[Array],
 _REFERENCE_OPS = (
     list(_ELEMENTWISE)
     + [OpKind.ADD, OpKind.SUB, OpKind.MUL, OpKind.DIV, OpKind.BIAS_ADD,
-       OpKind.SCALE, OpKind.SOFTCAP, OpKind.MAXPOOL, OpKind.AVGPOOL,
+       OpKind.SCALE, OpKind.SQRT, OpKind.TIME_SHIFT, OpKind.SOFTCAP,
+       OpKind.MAXPOOL, OpKind.AVGPOOL,
        OpKind.GLOBALPOOL, OpKind.LAYERNORM, OpKind.RMSNORM, OpKind.BATCHNORM,
        OpKind.SOFTMAX, OpKind.DROPOUT, OpKind.FLATTEN, OpKind.RESHAPE,
        OpKind.TRANSPOSE, OpKind.REORDER, OpKind.LINEAR, OpKind.MATMUL,
@@ -222,11 +231,19 @@ def lower_graph(g: Graph, backend: "registry.Backend") -> Callable[..., Any]:
     param_items = sorted(g.params.items())
     impls: Dict[int, registry.Impl] = {
         id(n): _impl_for(n, backend) for n in order
-        if n.op not in (OpKind.INPUT, OpKind.PARAM, OpKind.OUTPUT)
+        if n.op not in (OpKind.INPUT, OpKind.PARAM, OpKind.CONST,
+                        OpKind.OUTPUT)
+    }
+    # CONST sources bind to fill-constants once; under jit they are baked
+    # into the lowered program, never staged from the framework.
+    const_vals: Dict[int, Array] = {
+        id(n): jnp.full(n.spec.shape, n.attrs.get("fill", 0.0),
+                        dtype=n.spec.dtype)
+        for n in order if n.op is OpKind.CONST
     }
 
     def fn(params: Dict[str, Array], *inputs: Array):
-        env: Dict[int, Array] = {}
+        env: Dict[int, Array] = dict(const_vals)
         for nid, x in zip(input_ids, inputs):
             env[nid] = x
         for name, node in param_items:

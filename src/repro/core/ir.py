@@ -59,6 +59,12 @@ def NF() -> Tuple[Dim, ...]:
     return (Dim(Purpose.NONE, 0), Dim(Purpose.FEATURE, 0))
 
 
+def BSD() -> Tuple[Dim, ...]:
+    """Sequence layout (batch, positions, channels) for the sequence models."""
+    return (Dim(Purpose.NONE, 0), Dim(Purpose.FEATURE, 0),
+            Dim(Purpose.CHANNEL, 0))
+
+
 @dataclasses.dataclass(frozen=True)
 class TensorSpec:
     shape: Tuple[int, ...]
@@ -96,6 +102,9 @@ class OpKind(enum.Enum):
     SIGMOID = "sigmoid"
     TANH = "tanh"
     EXP = "exp"
+    SOFTPLUS = "softplus"
+    SQRT = "sqrt"             # optional 'min' attr clamps before the root
+    TIME_SHIFT = "time_shift" # prev-token features along axis 1 (zeros at t=0)
     ADD = "add"
     SUB = "sub"
     MUL = "mul"
@@ -119,6 +128,7 @@ class OpKind(enum.Enum):
     # structural
     INPUT = "input"
     PARAM = "param"
+    CONST = "const"           # materialized constant: attrs['fill'] + spec
     OUTPUT = "output"
     FUSED = "fused"           # a DFP fusion group (post-fusion-pass node)
 
@@ -126,11 +136,19 @@ class OpKind(enum.Enum):
 # Which OpKinds are elementwise-ish and therefore DFP-fusable.
 DFP_FUSABLE = {
     OpKind.RELU, OpKind.GELU, OpKind.SILU, OpKind.SIGMOID, OpKind.TANH,
-    OpKind.EXP, OpKind.ADD, OpKind.SUB, OpKind.MUL, OpKind.DIV,
+    OpKind.EXP, OpKind.SOFTPLUS, OpKind.SQRT, OpKind.ADD, OpKind.SUB,
+    OpKind.MUL, OpKind.DIV,
     OpKind.BIAS_ADD, OpKind.SCALE, OpKind.SOFTCAP, OpKind.LAYERNORM,
     OpKind.RMSNORM, OpKind.SOFTMAX, OpKind.BATCHNORM, OpKind.DROPOUT,
     OpKind.IDENTITY, OpKind.MAXPOOL, OpKind.AVGPOOL, OpKind.GLOBALPOOL,
 }
+
+# Graph-level sequence kernels: never DFP-fused, always elected as whole
+# nodes through the dispatch table (attention + linear-recurrence scans).
+SEQUENCE_OPS = {OpKind.ATTENTION, OpKind.RGLRU_SCAN, OpKind.RWKV6_SCAN}
+
+# Source nodes carry no inputs; everything else must have at least one.
+SOURCE_OPS = {OpKind.INPUT, OpKind.PARAM, OpKind.CONST}
 
 
 class Module(enum.Enum):
@@ -208,9 +226,14 @@ class Graph:
         return cons
 
     def replace(self, old: Node, new: Node) -> None:
-        """Rewire every consumer of ``old`` to consume ``new``."""
+        """Rewire every consumer of ``old`` to consume ``new`` — including
+        consumers buried in FUSED bodies, which live outside ``topo()`` (a
+        fusion group's side input must stay in sync with the body node that
+        reads it, or the group's local environment dangles)."""
         for n in self.topo():
             n.inputs = [new if i is old else i for i in n.inputs]
+            for b in n.body:
+                b.inputs = [new if i is old else i for i in b.inputs]
         self.outputs = [new if o is old else o for o in self.outputs]
 
     def validate(self) -> None:
@@ -223,7 +246,7 @@ class Graph:
         for o in self.outputs:
             assert id(o) in pos
         for n in order:
-            if n.op not in (OpKind.INPUT, OpKind.PARAM):
+            if n.op not in SOURCE_OPS:
                 assert n.inputs, f"non-source node {n} without inputs"
 
     def stats(self) -> Dict[str, int]:
@@ -249,3 +272,11 @@ def input_node(shape: Sequence[int], dtype: str = "float32",
 def param_node(shape: Sequence[int], dtype: str = "float32",
                name: str = "param") -> Node:
     return Node(OpKind.PARAM, [], TensorSpec(tuple(shape), dtype), name=name)
+
+
+def const_node(shape: Sequence[int], fill: float = 0.0,
+               dtype: str = "float32", name: str = "") -> Node:
+    """A materialized fill-constant (zero recurrence states, unit norm gains
+    ...) — a source node the executor binds without framework storage."""
+    return Node(OpKind.CONST, [], TensorSpec(tuple(shape), dtype),
+                attrs={"fill": float(fill)}, name=name or "const")

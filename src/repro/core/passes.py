@@ -31,7 +31,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from .ir import (DFP_FUSABLE, Graph, Module, Node, OpKind, TensorSpec)
+from .ir import (DFP_FUSABLE, SEQUENCE_OPS, SOURCE_OPS, Graph, Module, Node,
+                 OpKind, TensorSpec)
 
 
 # ----------------------------------------------------------------------------
@@ -106,9 +107,11 @@ def simplify(g: Graph) -> Graph:
 
 def assign_modules(g: Graph) -> Graph:
     for n in g.topo():
-        if n.op in (OpKind.INPUT, OpKind.PARAM, OpKind.OUTPUT):
+        if n.op in SOURCE_OPS or n.op is OpKind.OUTPUT:
             continue
-        if n.op in (OpKind.LINEAR, OpKind.MATMUL):
+        if n.op in (OpKind.LINEAR, OpKind.MATMUL) or n.op in SEQUENCE_OPS:
+            # sequence kernels (attention, linear-recurrence scans) are
+            # whole-node dispatch-table ops, like the matmul family
             n.module = Module.DNN
         elif n.op is OpKind.CONV2D:
             groups = n.attrs.get("groups", 1)
@@ -135,8 +138,11 @@ def form_fusion_groups(g: Graph) -> Graph:
     cons = g.consumers()
 
     def fusable(n: Node) -> bool:
+        # SEQUENCE_OPS are hard fusion barriers: attention and the
+        # recurrence scans must stay whole nodes for the dispatch table,
+        # never disappear into a depth-first elementwise group.
         return (n.module is Module.DFP and n.op in DFP_FUSABLE
-                and n.op is not OpKind.FUSED)
+                and n.op not in SEQUENCE_OPS and n.op is not OpKind.FUSED)
 
     visited: set = set()
     for n in g.topo():
@@ -190,7 +196,7 @@ def assign_layouts(g: Graph, backend: "object") -> Graph:
     prev_layout: Dict[int, str] = {}
     reorders = 0
     for n in g.topo():
-        if n.op in (OpKind.INPUT, OpKind.PARAM):
+        if n.op in SOURCE_OPS:
             continue
         want = backend.preferred_layout(n)
         n.layout = want
@@ -239,6 +245,24 @@ def _node_cost_terms(n: Node) -> Tuple[float, float, float]:
         roundtrip = float(in_bytes) + sum(
             2.0 * b.spec.size * eltsize for b in n.body)
         return flops, streamed, roundtrip
+    if n.op is OpKind.ATTENTION:
+        # (B, S, H, hd): one qkᵀ + one p·v matmul → 4·B·H·S²·hd FLOPs; a
+        # roundtrip impl additionally writes+reads the f32 S×S score matrix
+        # per head (what flash attention exists to avoid).
+        b, s, h, hd = n.spec.shape
+        flops = 4.0 * b * h * s * s * hd
+        score_bytes = 2.0 * b * h * s * s * 4.0
+        return flops, streamed, streamed + score_bytes
+    if n.op is OpKind.RGLRU_SCAN:
+        # h_t = a·h + b: ~2 FLOPs/element; streamed bytes dominate either way
+        return 2.0 * n.spec.size, streamed, streamed
+    if n.op is OpKind.RWKV6_SCAN:
+        # per step each head updates an hd×hd state: ~4·B·S·H·hd² FLOPs; a
+        # roundtrip impl spills the f32 state matrix every step.
+        b, s, h, hd = n.spec.shape
+        flops = 4.0 * b * s * h * hd * hd
+        state_bytes = 2.0 * b * s * h * hd * hd * 4.0
+        return flops, streamed, streamed + state_bytes
     return n.spec.size * _EW_FLOPS, streamed, streamed
 
 
@@ -254,8 +278,9 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
     from ..backends import registry as R
 
     elections: Dict[str, int] = {}
+    by_op: Dict[str, Dict[str, int]] = {}
     for n in g.topo():
-        if n.op in (OpKind.INPUT, OpKind.PARAM, OpKind.OUTPUT):
+        if n.op in SOURCE_OPS or n.op is OpKind.OUTPUT:
             continue
         cands = R.candidates(backend, n)
         if not cands:
@@ -270,7 +295,10 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
         best = min(cands, key=cost)
         n.impl = best.name
         elections[best.name] = elections.get(best.name, 0) + 1
+        per = by_op.setdefault(n.op.value, {})
+        per[best.name] = per.get(best.name, 0) + 1
     g.elections = elections
+    g.elections_by_op = by_op
     return g
 
 

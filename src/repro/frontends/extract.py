@@ -1,13 +1,23 @@
 """Graph extraction: framework modules → SOL IR (paper Sec. III-A,
 'extracts the computation graph from the framework').
 
-Walks the module tree structurally (the torch.jit-trace analogue) and emits
-one IR node per layer, with parameters registered under their framework
-dotted names so the SolModel can keep sharing the framework's parameter
-storage (paper Listing 2: 'param_0 = ... managed by framework')."""
+Extraction is driven by an **emitter registry**, mirroring how kernels
+register implementations in the backend dispatch table: one emitter per
+framework module type, looked up by exact type then MRO, so new layer kinds
+plug into the middleware without touching this file's core walk (the 2022
+follow-up paper's maintenance-overhead point).  An emitter receives the
+module, the current IR node(s) and an :class:`EmitContext` and returns the
+module's output node — containers (`Sequential`, `Residual`) recurse, so
+transformer and recurrent blocks extract as genuine multi-input graphs, not
+linear chains.
+
+Parameters are registered under their framework dotted names so the SolModel
+keeps sharing the framework's parameter storage (paper Listing 2:
+'param_0 = ... managed by framework').
+"""
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Tuple, Type
 
 import numpy as np
 
@@ -15,6 +25,120 @@ from ..core import ir
 from ..core.ir import Graph, Node, OpKind, TensorSpec
 from . import nn
 
+
+class UnsupportedModuleError(TypeError):
+    """Raised when no emitter is registered for a module type.  Names the
+    offending module's path in the tree and the registered emitters, so the
+    fix (``@register_emitter(MyModule)``) is one error message away."""
+
+
+# ---------------------------------------------------------------------------
+# the emitter registry
+# ---------------------------------------------------------------------------
+
+# fn(module, ctx, x: Node, path: str) -> Node  (path is the dotted prefix of
+# the module in the tree, '' for the root, used for parameter names)
+EmitterFn = Callable[[nn.Module, "EmitContext", Node, str], Node]
+
+_EMITTERS: Dict[Type[nn.Module], EmitterFn] = {}
+
+
+def register_emitter(*module_types: Type[nn.Module]
+                     ) -> Callable[[EmitterFn], EmitterFn]:
+    """Register an extraction emitter for one or more module types — the
+    frontend analogue of ``backends.registry.register_impl``.  Subclasses
+    inherit an emitter through the MRO unless they register their own."""
+    def deco(fn: EmitterFn) -> EmitterFn:
+        for t in module_types:
+            _EMITTERS[t] = fn
+        return fn
+    return deco
+
+
+def registered_emitters() -> List[str]:
+    """Names of all module types with an emitter (the supported-module set)."""
+    return sorted(t.__name__ for t in _EMITTERS)
+
+
+def _emitter_for(m: nn.Module) -> EmitterFn | None:
+    for t in type(m).__mro__:
+        if t in _EMITTERS:
+            return _EMITTERS[t]
+    return None
+
+
+class EmitContext:
+    """Per-extraction state: the parameter table plus node builders shared by
+    every emitter."""
+
+    def __init__(self, dtype: str = "float32"):
+        self.dtype = dtype
+        self.params: Dict[str, Node] = {}
+
+    def emit(self, m: nn.Module, x: Node, path: str = "") -> Node:
+        fn = _emitter_for(m)
+        if fn is None:
+            raise UnsupportedModuleError(
+                f"no emitter registered for {type(m).__name__} at "
+                f"{path.rstrip('.') or '<root>'} in the module tree; "
+                f"registered emitters: {', '.join(registered_emitters())}. "
+                f"Add one with frontends.extract."
+                f"register_emitter({type(m).__name__}).")
+        return fn(m, self, x, path)
+
+    def param(self, name: str, arr) -> Node:
+        if name in self.params:        # same framework storage → same node
+            return self.params[name]
+        n = ir.param_node(tuple(arr.shape), self.dtype, name=name)
+        self.params[name] = n
+        return n
+
+    def const(self, shape: Tuple[int, ...], fill: float = 0.0,
+              dtype: str | None = None) -> Node:
+        return ir.const_node(shape, fill, dtype or self.dtype)
+
+    def matmul(self, x: Node, w: Node) -> Node:
+        """x @ w with w in (in, out) layout — the sequence layers' io
+        projections."""
+        shape = x.spec.shape[:-1] + (w.spec.shape[-1],)
+        return Node(OpKind.MATMUL, [x, w], TensorSpec(shape, self.dtype))
+
+    def reshape(self, x: Node, shape: Tuple[int, ...]) -> Node:
+        return Node(OpKind.RESHAPE, [x], TensorSpec(tuple(shape), self.dtype),
+                    attrs={"shape": tuple(shape)})
+
+    def unary(self, op: OpKind, x: Node, **attrs) -> Node:
+        return Node(op, [x], TensorSpec(x.spec.shape, self.dtype),
+                    attrs=attrs)
+
+    def binary(self, op: OpKind, a: Node, b: Node) -> Node:
+        shape = np.broadcast_shapes(a.spec.shape, b.spec.shape)
+        return Node(op, [a, b], TensorSpec(tuple(shape), self.dtype))
+
+
+# ---------------------------------------------------------------------------
+# container emitters
+# ---------------------------------------------------------------------------
+
+@register_emitter(nn.Sequential)
+def _emit_sequential(m: nn.Sequential, ctx: EmitContext, x: Node,
+                     path: str) -> Node:
+    cur = x
+    for idx, child in enumerate(m):
+        cur = ctx.emit(child, cur, f"{path}{idx}.")
+    return cur
+
+
+@register_emitter(nn.Residual)
+def _emit_residual(m: nn.Residual, ctx: EmitContext, x: Node,
+                   path: str) -> Node:
+    # the multi-input node: skip + transformed branch
+    return ctx.binary(OpKind.ADD, x, _emit_sequential(m, ctx, x, path))
+
+
+# ---------------------------------------------------------------------------
+# layer emitters (the paper's CNN/MLP scope)
+# ---------------------------------------------------------------------------
 
 def _out_shape_conv(x: Tuple[int, ...], m: nn.Conv2d) -> Tuple[int, ...]:
     a = m.attrs
@@ -27,83 +151,197 @@ def _out_shape_pool(x: Tuple[int, ...], k: int, s: int) -> Tuple[int, ...]:
     return (x[0], x[1], (x[2] - k) // s + 1, (x[3] - k) // s + 1)
 
 
-def extract(model: nn.Sequential, input_shape: Tuple[int, ...],
+@register_emitter(nn.Linear)
+def _emit_linear(m: nn.Linear, ctx: EmitContext, x: Node, path: str) -> Node:
+    w = ctx.param(path + "weight", m._params["weight"])
+    shape = x.spec.shape[:-1] + (m.out_features,)
+    cur = Node(OpKind.LINEAR, [x, w], TensorSpec(shape, ctx.dtype),
+               attrs={"out_features": m.out_features})
+    if m.has_bias:
+        b = ctx.param(path + "bias", m._params["bias"])
+        cur = Node(OpKind.BIAS_ADD, [cur, b], TensorSpec(shape, ctx.dtype),
+                   attrs={"axis": -1})
+    return cur
+
+
+@register_emitter(nn.Conv2d)
+def _emit_conv2d(m: nn.Conv2d, ctx: EmitContext, x: Node, path: str) -> Node:
+    w = ctx.param(path + "weight", m._params["weight"])
+    shape = _out_shape_conv(x.spec.shape, m)
+    cur = Node(OpKind.CONV2D, [x, w], TensorSpec(shape, ctx.dtype),
+               attrs={"stride": m.attrs["stride"],
+                      "padding": m.attrs["padding"],
+                      "groups": m.attrs["groups"],
+                      "out_channels": m.attrs["out_ch"]})
+    if m.has_bias:
+        b = ctx.param(path + "bias", m._params["bias"])
+        cur = Node(OpKind.BIAS_ADD, [cur, b], TensorSpec(shape, ctx.dtype),
+                   attrs={"axis": 1})
+    return cur
+
+
+@register_emitter(nn.ReLU)
+def _emit_relu(m, ctx, x, path):
+    return ctx.unary(OpKind.RELU, x)
+
+
+@register_emitter(nn.GELU)
+def _emit_gelu(m, ctx, x, path):
+    return ctx.unary(OpKind.GELU, x)
+
+
+@register_emitter(nn.MaxPool2d)
+def _emit_maxpool(m: nn.MaxPool2d, ctx, x, path):
+    shape = _out_shape_pool(x.spec.shape, m.kernel, m.stride)
+    return Node(OpKind.MAXPOOL, [x], TensorSpec(shape, ctx.dtype),
+                attrs={"kernel": m.kernel, "stride": m.stride})
+
+
+@register_emitter(nn.AvgPool2d)
+def _emit_avgpool(m: nn.AvgPool2d, ctx, x, path):
+    shape = _out_shape_pool(x.spec.shape, m.kernel, m.stride)
+    return Node(OpKind.AVGPOOL, [x], TensorSpec(shape, ctx.dtype),
+                attrs={"kernel": m.kernel, "stride": m.stride})
+
+
+@register_emitter(nn.GlobalAvgPool)
+def _emit_globalpool(m, ctx, x, path):
+    return Node(OpKind.GLOBALPOOL, [x],
+                TensorSpec(x.spec.shape[:2], ctx.dtype))
+
+
+@register_emitter(nn.Flatten)
+def _emit_flatten(m, ctx, x, path):
+    flat = 1
+    for s in x.spec.shape[1:]:
+        flat *= s
+    return Node(OpKind.FLATTEN, [x],
+                TensorSpec((x.spec.shape[0], flat), ctx.dtype))
+
+
+@register_emitter(nn.LayerNorm)
+def _emit_layernorm(m: nn.LayerNorm, ctx, x, path):
+    g = ctx.param(path + "weight", m._params["weight"])
+    b = ctx.param(path + "bias", m._params["bias"])
+    return Node(OpKind.LAYERNORM, [x, g, b],
+                TensorSpec(x.spec.shape, ctx.dtype))
+
+
+@register_emitter(nn.BatchNorm2d)
+def _emit_batchnorm(m: nn.BatchNorm2d, ctx, x, path):
+    ps = [ctx.param(path + n, m._params[n]) for n in
+          ("weight", "bias", "running_mean", "running_var")]
+    return Node(OpKind.BATCHNORM, [x] + ps, TensorSpec(x.spec.shape,
+                                                       ctx.dtype))
+
+
+@register_emitter(nn.Dropout)
+def _emit_dropout(m: nn.Dropout, ctx, x, path):
+    return ctx.unary(OpKind.DROPOUT, x, p=m.p)
+
+
+# ---------------------------------------------------------------------------
+# sequence-layer emitters: ATTENTION / RGLRU_SCAN / RWKV6_SCAN
+# ---------------------------------------------------------------------------
+
+@register_emitter(nn.MultiHeadAttention)
+def _emit_attention(m: nn.MultiHeadAttention, ctx: EmitContext, x: Node,
+                    path: str) -> Node:
+    b, s, _ = x.spec.shape
+    hd = m.head_dim
+    q = ctx.reshape(ctx.matmul(x, ctx.param(path + "wq", m._params["wq"])),
+                    (b, s, m.n_heads, hd))
+    k = ctx.reshape(ctx.matmul(x, ctx.param(path + "wk", m._params["wk"])),
+                    (b, s, m.n_kv_heads, hd))
+    v = ctx.reshape(ctx.matmul(x, ctx.param(path + "wv", m._params["wv"])),
+                    (b, s, m.n_kv_heads, hd))
+    att = Node(OpKind.ATTENTION, [q, k, v],
+               TensorSpec((b, s, m.n_heads, hd), ctx.dtype),
+               attrs={"causal": m.causal, "window": m.window, "cap": m.cap})
+    o = ctx.reshape(att, (b, s, m.n_heads * hd))
+    return ctx.matmul(o, ctx.param(path + "wo", m._params["wo"]))
+
+
+@register_emitter(nn.RGLRU)
+def _emit_rglru(m: nn.RGLRU, ctx: EmitContext, x: Node, path: str) -> Node:
+    """models.recurrent.rglru_gates + the RGLRU_SCAN kernel node:
+    a = exp(-c·softplus(λ)·sigmoid(x·wa)); b = √(1-a²)·sigmoid(x·wx)·x."""
+    from ..models.recurrent import RGLRU_C
+    bsz, s, d = x.spec.shape
+    wa = ctx.param(path + "wa", m._params["wa"])
+    wx = ctx.param(path + "wx", m._params["wx"])
+    lam = ctx.param(path + "lam", m._params["lam"])
+    r = ctx.unary(OpKind.SIGMOID, ctx.matmul(x, wa))
+    i = ctx.unary(OpKind.SIGMOID, ctx.matmul(x, wx))
+    decay = ctx.unary(OpKind.SCALE, ctx.unary(OpKind.SOFTPLUS, lam),
+                      value=-RGLRU_C)
+    a = ctx.unary(OpKind.EXP, ctx.binary(OpKind.MUL, r, decay))
+    one_minus_a2 = ctx.binary(OpKind.SUB, ctx.const((1,), 1.0),
+                              ctx.binary(OpKind.MUL, a, a))
+    gate = ctx.unary(OpKind.SQRT, one_minus_a2, min=1e-12)
+    bb = ctx.binary(OpKind.MUL, ctx.binary(OpKind.MUL, gate, i), x)
+    h0 = ctx.const((bsz, d), 0.0)
+    return Node(OpKind.RGLRU_SCAN, [a, bb, h0],
+                TensorSpec((bsz, s, d), ctx.dtype))
+
+
+@register_emitter(nn.RWKV6TimeMix)
+def _emit_rwkv6(m: nn.RWKV6TimeMix, ctx: EmitContext, x: Node,
+                path: str) -> Node:
+    """models.recurrent.rwkv_time_mix_seq as a graph: token-shift lerp with
+    per-target LoRA mixes → r/k/v/decay projections → RWKV6_SCAN → per-head
+    groupnorm → silu gate → output projection."""
+    bsz, s, d = x.spec.shape
+    h, hd = m.n_heads, d // m.n_heads
+    P = lambda name: ctx.param(path + name, m._params[name])
+
+    xs = ctx.unary(OpKind.TIME_SHIFT, x)
+    dx = ctx.binary(OpKind.SUB, xs, x)
+    xm = ctx.binary(OpKind.ADD, x,
+                    ctx.binary(OpKind.MUL, dx, P("mu_x")))
+
+    def lora(src: Node, t: str) -> Node:
+        inner = ctx.unary(OpKind.TANH, ctx.matmul(src, P(f"lora_a_{t}")))
+        return ctx.matmul(inner, P(f"lora_b_{t}"))
+
+    def mixed(t: str) -> Node:
+        mix = ctx.binary(OpKind.ADD, P(f"mu_{t}"), lora(xm, t))
+        return ctx.binary(OpKind.ADD, x, ctx.binary(OpKind.MUL, dx, mix))
+
+    r = ctx.reshape(ctx.matmul(mixed("r"), P("wr")), (bsz, s, h, hd))
+    k = ctx.reshape(ctx.matmul(mixed("k"), P("wk")), (bsz, s, h, hd))
+    v = ctx.reshape(ctx.matmul(mixed("v"), P("wv")), (bsz, s, h, hd))
+    g = ctx.unary(OpKind.SILU, ctx.matmul(mixed("g"), P("wg")))
+    # decay: logw = -exp(w0 + lora_w(m_w)) ≤ 0
+    wsum = ctx.binary(OpKind.ADD, P("w0"), lora(mixed("w"), "w"))
+    logw = ctx.reshape(ctx.unary(OpKind.SCALE, ctx.unary(OpKind.EXP, wsum),
+                                 value=-1.0), (bsz, s, h, hd))
+    u = ctx.reshape(P("u"), (h, hd))
+    s0 = ctx.const((bsz, h, hd, hd), 0.0)
+    o = Node(OpKind.RWKV6_SCAN, [r, k, v, logw, u, s0],
+             TensorSpec((bsz, s, h, hd), ctx.dtype))
+    # per-head groupnorm == layernorm over the trailing head dim
+    gn = Node(OpKind.LAYERNORM, [o, ctx.const((hd,), 1.0),
+                                 ctx.const((hd,), 0.0)],
+              TensorSpec((bsz, s, h, hd), ctx.dtype), attrs={"eps": 64e-5})
+    flat = ctx.reshape(gn, (bsz, s, d))
+    scaled = ctx.binary(OpKind.ADD,
+                        ctx.binary(OpKind.MUL, flat, P("gn_gain")),
+                        P("gn_bias"))
+    return ctx.matmul(ctx.binary(OpKind.MUL, scaled, g), P("wo"))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def extract(model: nn.Module, input_shape: Tuple[int, ...],
             dtype: str = "float32") -> Graph:
-    if not isinstance(model, nn.Sequential):
-        raise TypeError("extraction currently covers Sequential models "
-                        "(the paper's CNN/MLP scope)")
-    dims = ir.NCHW() if len(input_shape) == 4 else ir.NF()
+    rank = len(input_shape)
+    dims = {4: ir.NCHW(), 3: ir.BSD(), 2: ir.NF()}.get(rank, ())
     x = ir.input_node(input_shape, dtype, dims, name="input")
-    params: Dict[str, Node] = {}
-    cur = x
-    shape = tuple(input_shape)
-
-    def param(name: str, arr) -> Node:
-        n = ir.param_node(tuple(arr.shape), dtype, name=name)
-        params[name] = n
-        return n
-
-    for idx, m in enumerate(model):
-        pfx = f"{idx}."
-        if isinstance(m, nn.Linear):
-            w = param(pfx + "weight", m._params["weight"])
-            ins = [cur, w]
-            shape = shape[:-1] + (m.out_features,)
-            cur = Node(OpKind.LINEAR, ins, TensorSpec(shape, dtype),
-                       attrs={"out_features": m.out_features})
-            if m.has_bias:
-                b = param(pfx + "bias", m._params["bias"])
-                cur = Node(OpKind.BIAS_ADD, [cur, b],
-                           TensorSpec(shape, dtype), attrs={"axis": -1})
-        elif isinstance(m, nn.Conv2d):
-            w = param(pfx + "weight", m._params["weight"])
-            shape = _out_shape_conv(shape, m)
-            cur = Node(OpKind.CONV2D, [cur, w], TensorSpec(shape, dtype),
-                       attrs={"stride": m.attrs["stride"],
-                              "padding": m.attrs["padding"],
-                              "groups": m.attrs["groups"],
-                              "out_channels": m.attrs["out_ch"]})
-            if m.has_bias:
-                b = param(pfx + "bias", m._params["bias"])
-                cur = Node(OpKind.BIAS_ADD, [cur, b],
-                           TensorSpec(shape, dtype), attrs={"axis": 1})
-        elif isinstance(m, nn.ReLU):
-            cur = Node(OpKind.RELU, [cur], TensorSpec(shape, dtype))
-        elif isinstance(m, nn.GELU):
-            cur = Node(OpKind.GELU, [cur], TensorSpec(shape, dtype))
-        elif isinstance(m, nn.MaxPool2d):
-            shape = _out_shape_pool(shape, m.kernel, m.stride)
-            cur = Node(OpKind.MAXPOOL, [cur], TensorSpec(shape, dtype),
-                       attrs={"kernel": m.kernel, "stride": m.stride})
-        elif isinstance(m, nn.AvgPool2d):
-            shape = _out_shape_pool(shape, m.kernel, m.stride)
-            cur = Node(OpKind.AVGPOOL, [cur], TensorSpec(shape, dtype),
-                       attrs={"kernel": m.kernel, "stride": m.stride})
-        elif isinstance(m, nn.GlobalAvgPool):
-            shape = shape[:2]
-            cur = Node(OpKind.GLOBALPOOL, [cur], TensorSpec(shape, dtype))
-        elif isinstance(m, nn.Flatten):
-            flat = 1
-            for s in shape[1:]:
-                flat *= s
-            shape = (shape[0], flat)
-            cur = Node(OpKind.FLATTEN, [cur], TensorSpec(shape, dtype))
-        elif isinstance(m, nn.LayerNorm):
-            g = param(pfx + "weight", m._params["weight"])
-            b = param(pfx + "bias", m._params["bias"])
-            cur = Node(OpKind.LAYERNORM, [cur, g, b],
-                       TensorSpec(shape, dtype))
-        elif isinstance(m, nn.BatchNorm2d):
-            ps = [param(pfx + n, m._params[n]) for n in
-                  ("weight", "bias", "running_mean", "running_var")]
-            cur = Node(OpKind.BATCHNORM, [cur] + ps, TensorSpec(shape, dtype))
-        elif isinstance(m, nn.Dropout):
-            cur = Node(OpKind.DROPOUT, [cur], TensorSpec(shape, dtype),
-                       attrs={"p": m.p})
-        elif isinstance(m, nn.Sequential):
-            raise TypeError("nested Sequential: flatten before extraction")
-        else:
-            raise TypeError(f"unsupported layer for extraction: {type(m)}")
-    g = Graph(inputs=[x], outputs=[cur], params=params)
+    ctx = EmitContext(dtype)
+    out = ctx.emit(model, x, "")
+    g = Graph(inputs=[x], outputs=[out], params=ctx.params)
     g.validate()
     return g

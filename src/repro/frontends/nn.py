@@ -230,6 +230,115 @@ class Sequential(Module):
         return iter(self.mods)
 
 
+class Residual(Sequential):
+    """y = x + chain(x): the multi-input container (transformer / recurrent
+    blocks) — extraction emits the inner chain plus an ADD with the skip."""
+
+    def forward(self, x: Array) -> Array:
+        y = x
+        for m in self.mods:
+            y = m(y)
+        return x + y
+
+
+# -- sequence layers (attention + linear recurrences) -------------------------
+#
+# Eager forwards delegate to the models/ reference functions (flash_mha,
+# rglru_seq, rwkv_time_mix_seq); their extraction emitters produce
+# ATTENTION / RGLRU_SCAN / RWKV6_SCAN graph nodes so the dispatch table can
+# elect the Pallas kernels (see frontends/extract.py).
+
+class MultiHeadAttention(Module):
+    """Bias-free multi-head attention with GQA, sliding window and logit
+    softcap.  Weights are stored (in, out) — the sequence layers follow the
+    io layout so projections extract as MATMUL nodes."""
+
+    def __init__(self, d_model: int, n_heads: int,
+                 n_kv_heads: Optional[int] = None, causal: bool = True,
+                 window: int = 0, cap: float = 0.0):
+        super().__init__()
+        if d_model % n_heads:
+            raise ValueError(f"d_model {d_model} not divisible by {n_heads}")
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_kv_heads = n_kv_heads or n_heads
+        if n_heads % self.n_kv_heads:
+            raise ValueError("n_heads must be a multiple of n_kv_heads")
+        self.head_dim = d_model // n_heads
+        self.causal, self.window, self.cap = causal, window, cap
+        hd = self.head_dim
+        self.register("wq", _kaiming(_next_key(), (d_model, n_heads * hd),
+                                     d_model))
+        self.register("wk", _kaiming(_next_key(),
+                                     (d_model, self.n_kv_heads * hd), d_model))
+        self.register("wv", _kaiming(_next_key(),
+                                     (d_model, self.n_kv_heads * hd), d_model))
+        self.register("wo", _kaiming(_next_key(), (n_heads * hd, d_model),
+                                     n_heads * hd))
+
+    def forward(self, x: Array) -> Array:
+        from ..models.flash import flash_mha
+        b, s, _ = x.shape
+        p = self._params
+        hd = self.head_dim
+        q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(
+            b, s, self.n_heads, hd)
+        k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(
+            b, s, self.n_kv_heads, hd)
+        v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(
+            b, s, self.n_kv_heads, hd)
+        o = flash_mha(q, k, v, self.causal, self.window, self.cap)
+        return jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1), p["wo"])
+
+
+class RGLRU(Module):
+    """Griffin's real-gated linear recurrent unit (the recurrence only):
+    h_t = a_t·h_{t-1} + b_t with input/recurrence gates over x: (B,S,D)."""
+
+    def __init__(self, dim: int):
+        super().__init__()
+        self.dim = dim
+        self.register("wa", _kaiming(_next_key(), (dim, dim), dim))
+        self.register("wx", _kaiming(_next_key(), (dim, dim), dim))
+        # lam init: softplus(lam) ∈ ~(0.3, 1.2) → decay a well inside (0, 1)
+        self.register("lam", jax.random.uniform(
+            _next_key(), (dim,), minval=0.0, maxval=1.0))
+
+    def forward(self, x: Array) -> Array:
+        from ..models.recurrent import rglru_seq
+        return rglru_seq(self._params, x)[0]
+
+
+class RWKV6TimeMix(Module):
+    """RWKV6 (Finch) time mix: data-dependent token-shift lerp + LoRA decay
+    feeding the WKV linear recurrence, per-head groupnorm, silu gate."""
+
+    def __init__(self, dim: int, n_heads: int, lora_rank: int = 4):
+        super().__init__()
+        if dim % n_heads:
+            raise ValueError(f"dim {dim} not divisible by {n_heads} heads")
+        self.dim = dim
+        self.n_heads = n_heads
+        self.lora_rank = lora_rank
+        u01 = lambda shape: jax.random.uniform(_next_key(), shape)
+        nrm = lambda shape, s: jax.random.normal(_next_key(), shape) * s
+        self.register("mu_x", u01((dim,)))
+        for t in ("r", "k", "v", "w", "g"):
+            self.register(f"mu_{t}", u01((dim,)))
+            self.register(f"lora_a_{t}", nrm((dim, lora_rank), 0.1))
+            self.register(f"lora_b_{t}", nrm((lora_rank, dim), 0.1))
+        self.register("w0", nrm((dim,), 0.3) - 2.0)   # decay exp(-e^{w0}) ≈ .9
+        self.register("u", nrm((dim,), 0.5))
+        for t in ("r", "k", "v", "g", "o"):
+            self.register(f"w{t}", _kaiming(_next_key(), (dim, dim), dim))
+        self.register("gn_gain", 1.0 + nrm((dim,), 0.1))
+        self.register("gn_bias", nrm((dim,), 0.1))
+
+    def forward(self, x: Array) -> Array:
+        from ..models.recurrent import rwkv_time_mix_seq
+        return rwkv_time_mix_seq(self._params, x, self.n_heads)[0]
+
+
 # -- eager op-at-a-time kernels (each a separate jit = dispatch per layer) ----
 
 @jax.jit
@@ -319,6 +428,38 @@ def small_cnn(in_ch: int = 3, classes: int = 10) -> Sequential:
         GlobalAvgPool(), Flatten(),
         Linear(128, 256), ReLU(), Dropout(0.1),
         Linear(256, classes),
+    )
+
+
+def transformer_block(d_model: int = 64, n_heads: int = 4,
+                      n_kv_heads: Optional[int] = None,
+                      mlp_mult: int = 4, causal: bool = True) -> Sequential:
+    """Pre-norm transformer block: attention + MLP, both residual."""
+    return Sequential(
+        Residual(LayerNorm(d_model),
+                 MultiHeadAttention(d_model, n_heads, n_kv_heads,
+                                    causal=causal)),
+        Residual(LayerNorm(d_model), Linear(d_model, mlp_mult * d_model),
+                 GELU(), Linear(mlp_mult * d_model, d_model)),
+    )
+
+
+def griffin_block(d_model: int = 64, mlp_mult: int = 2) -> Sequential:
+    """RecurrentGemma/Griffin-style block: RG-LRU recurrence + MLP."""
+    return Sequential(
+        Residual(LayerNorm(d_model), RGLRU(d_model)),
+        Residual(LayerNorm(d_model), Linear(d_model, mlp_mult * d_model),
+                 GELU(), Linear(mlp_mult * d_model, d_model)),
+    )
+
+
+def rwkv6_block(d_model: int = 64, n_heads: int = 4,
+                mlp_mult: int = 2) -> Sequential:
+    """RWKV6 (Finch) block: time mix + MLP, both residual."""
+    return Sequential(
+        Residual(LayerNorm(d_model), RWKV6TimeMix(d_model, n_heads)),
+        Residual(LayerNorm(d_model), Linear(d_model, mlp_mult * d_model),
+                 GELU(), Linear(mlp_mult * d_model, d_model)),
     )
 
 

@@ -64,9 +64,14 @@ class SolModel(nn.Module):
     def stats(self) -> Dict[str, int]:
         return self.graph.stats()
 
-    def impl_report(self) -> Dict[str, int]:
-        """Histogram of elected implementations (impl name → node count) —
-        the per-op flavour choices the election pass made for this backend."""
+    def impl_report(self, by_kind: bool = False) -> Dict[str, Any]:
+        """Elected-implementation report.  Default: a flat histogram
+        (impl name → node count).  With ``by_kind=True``: a per-OpKind
+        breakdown ``{op value → {impl name → count}}`` showing which flavour
+        the election pass chose for each kind of node on this backend."""
+        if by_kind:
+            return {op: dict(impls) for op, impls in
+                    getattr(self.graph, "elections_by_op", {}).items()}
         return dict(getattr(self.graph, "elections", {}))
 
 

@@ -180,8 +180,8 @@ def _wkv_chunked(r, k, v, logw, u, s0):
     State S: (B,H,hd_k,hd_v).  Returns (o: (B,S,H,hd), S_last)."""
     bsz, s, h, hd = r.shape
     c = min(RWKV_CHUNK, s)
-    if s % c:
-        raise ValueError(f"seq {s} not divisible by chunk {c}")
+    while s % c:          # largest divisor ≤ RWKV_CHUNK; exact at any chunk
+        c -= 1
     nc = s // c
     rc = r.reshape(bsz, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
     kc = k.reshape(bsz, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
