@@ -1,0 +1,235 @@
+"""Autotune driver — populates the persistent timing cache the election pass
+prefers over the roofline model (``core.autotune``).
+
+For each (op, shape) in the sweep it times **every impl the dispatch table
+admits** for the chosen backend; for tunable kernels (the MXU matmul family)
+it additionally sweeps the kernel's tile-config search space and records the
+winner's config next to its time, so a later election can pin it on the node.
+
+Run:  PYTHONPATH=src python -m benchmarks.autotune \\
+          --backend pallas_interpret --tiny --cache autotune_cache.json --verify
+
+``--verify`` reloads the cache from disk and re-runs the election on a small
+model, failing unless the report shows 'measured' provenance — the
+write → read → election round-trip CI smokes on every commit.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .paper_tables import _time
+
+# (M, K, N) problem sweeps; --tiny keeps CI's interpret-mode runs quick
+SHAPES: Dict[str, List[Tuple[int, int, int]]] = {
+    "matmul": [(256, 256, 256), (512, 512, 512), (128, 512, 256)],
+    "linear": [(32, 1024, 1024), (8, 4096, 512)],
+}
+TINY_SHAPES: Dict[str, List[Tuple[int, int, int]]] = {
+    "matmul": [(32, 32, 32), (16, 48, 24)],
+    "linear": [(8, 64, 32)],
+}
+
+
+def _node(op: str, shape: Tuple[int, int, int]):
+    """One dispatchable node for an (op, M, K, N) problem."""
+    from repro.core import ir
+    from repro.core.ir import Node, OpKind, TensorSpec
+    m, k, n = shape
+    if op == "matmul":
+        return Node(OpKind.MATMUL,
+                    [ir.input_node((m, k)), ir.input_node((k, n))],
+                    TensorSpec((m, n)))
+    if op == "linear":
+        return Node(OpKind.LINEAR,
+                    [ir.input_node((m, k)), ir.param_node((n, k), name="w")],
+                    TensorSpec((m, n)), attrs={"out_features": n})
+    raise KeyError(f"unknown autotune op {op!r}")
+
+
+def _build(op: str, shape: Tuple[int, int, int]):
+    """The node plus concrete operand arrays to time it with."""
+    m, k, n = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w_shape = (k, n) if op == "matmul" else (n, k)   # linear stores (out,in)
+    w = jnp.asarray(rng.standard_normal(w_shape), jnp.float32)
+    return _node(op, shape), [x, w]
+
+
+def _time_impl(impl, node, vals: Sequence[jax.Array], backend,
+               warmup: int, iters: int) -> float:
+    fn = jax.jit(lambda *a: impl.fn(node, list(a), backend))
+    return _time(lambda: fn(*vals), warmup=warmup, iters=iters)
+
+
+def tune(backend_name: str = "pallas_interpret",
+         ops: Sequence[str] = ("matmul", "linear"), *,
+         tiny: bool = False, warmup: int = 2, iters: int = 5,
+         cache=None) -> List[Tuple[str, float, str]]:
+    """Measure every admissible impl of each (op, shape) through the dispatch
+    table, recording best times (and winning tile configs) into ``cache``.
+    Returns benchmark rows for the CSV/JSON harness."""
+    from repro.backends import get_backend
+    from repro.backends import registry as R
+    from repro.core import autotune as AT
+    from repro.core.passes import _node_cost_terms
+    from repro.kernels.matmul.kernel import tile_space
+
+    backend = get_backend(backend_name)
+    cache = cache if cache is not None else AT.get_cache()
+    rows: List[Tuple[str, float, str]] = []
+    shapes = TINY_SHAPES if tiny else SHAPES
+    for op in ops:
+        for shape in shapes[op]:
+            node, vals = _build(op, shape)
+            flops, streamed, roundtrip = _node_cost_terms(node)
+            for impl in R.candidates(backend, node):
+                configs: List[Optional[Tuple[int, int, int]]] = [None]
+                if impl.name.endswith("_mxu"):
+                    m, k, n = shape
+                    configs = list(tile_space(m, k, n, backend.hw))
+                best_us, best_cfg = float("inf"), None
+                for cfg in configs:
+                    node.attrs.pop("mxu_block", None)
+                    if cfg is not None:
+                        node.attrs["mxu_block"] = cfg
+                    us = _time_impl(impl, node, vals, backend, warmup, iters)
+                    if us < best_us:
+                        best_us, best_cfg = us, cfg
+                nbytes = roundtrip if impl.memory == "roundtrip" else streamed
+                cache.record(op, AT.node_shape(node), node.spec.dtype,
+                             backend_name, impl.name, best_us,
+                             config=best_cfg, flops=flops, nbytes=nbytes)
+                tag = "x".join(str(d) for d in shape)
+                derived = f"configs={len(configs)}"
+                if best_cfg is not None:
+                    derived += ";best=" + "x".join(str(d) for d in best_cfg)
+                rows.append((f"autotune_{backend_name}_{op}_{tag}_"
+                             f"{impl.name}", best_us, derived))
+    return rows
+
+
+def matmul_rows() -> List[Tuple[str, float, str]]:
+    """The ``matmul`` benchmark table: tiled Pallas MXU matmul (interpret
+    mode off-TPU) vs the einsum reference across aligned and ragged shapes,
+    with max|Δ| in the derived column — the perf-trajectory data points
+    BENCH_matmul.json accumulates."""
+    from repro.kernels.matmul import matmul
+    from repro.kernels.matmul.ref import matmul_ref
+
+    rng = np.random.default_rng(0)
+    rows: List[Tuple[str, float, str]] = []
+    for m, k, n in ((128, 128, 128), (96, 80, 56), (64, 256, 128)):
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        ref = jax.jit(matmul_ref)
+        t_ref = _time(lambda: ref(x, w), warmup=2, iters=5)
+        t_mxu = _time(lambda: matmul(x, w, interpret=True),
+                      warmup=2, iters=5)
+        err = float(jnp.abs(matmul(x, w, interpret=True)
+                            - matmul_ref(x, w)).max())
+        tag = f"matmul_{m}x{k}x{n}"
+        rows.append((f"{tag}_ref_einsum", t_ref, ""))
+        rows.append((f"{tag}_pallas_mxu_interpret", t_mxu,
+                     f"max_abs_err={err:.2e}"))
+    return rows
+
+
+def csv_rows() -> List[Tuple[str, float, str]]:
+    """The ``autotune`` benchmark table: a tiny sweep on the pallas_interpret
+    and host_cpu backends.  Uses a local cache so a benchmark run never
+    perturbs the process-wide election state of the other tables."""
+    from repro.core.autotune import AutotuneCache
+    cache = AutotuneCache()
+    rows = []
+    for backend in ("pallas_interpret", "host_cpu"):
+        rows += tune(backend, tiny=True, cache=cache)
+    return rows
+
+
+def verify_cache(path: str) -> int:
+    """Reload ``path`` from disk, install it, and prove each tuned
+    (backend, op) in the file yields a *measured* election on a fresh graph
+    — the write → read → election round-trip CI runs after tuning."""
+    from repro.backends import get_backend
+    from repro.core import autotune as AT, passes
+    from repro.core.ir import Graph
+
+    cache = AT.AutotuneCache.load(path)
+    if cache.stale:
+        print(f"[autotune] {path} has a stale schema", file=sys.stderr)
+        return 1
+    if not len(cache):
+        print(f"[autotune] {path} holds no measurements", file=sys.stderr)
+        return 1
+    groups = {}                                  # (op, dtype, backend) → bucket
+    for key, bucket, _impl, _m in cache.entries():
+        groups.setdefault(key, bucket)
+    prev = AT.get_cache()                        # restore, don't reset: None
+    AT.set_cache(cache)                          # would re-read the env var
+    measured, cold = [], []
+    try:
+        for (op, _dtype, backend_name), bucket in sorted(groups.items()):
+            try:
+                backend = get_backend(backend_name)
+                node = _node(op, bucket)
+            except KeyError:                     # foreign backend / op kind
+                continue
+            g = Graph([node.inputs[0]], [node], {})
+            passes.elect_implementations(g, backend)
+            tag = f"{backend_name}:{op}→{node.impl}"
+            if "measured" in g.election_provenance.get(node.impl, {}):
+                measured.append(tag)
+            else:
+                cold.append(tag)
+    finally:
+        AT.set_cache(prev)
+    print(f"[autotune] verified {path}: {len(cache)} measurements, "
+          f"measured elections: {measured}")
+    if cold or not measured:
+        print(f"[autotune] elections that ignored the cache: {cold}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", action="append",
+                    help="backend(s) to tune (default: pallas_interpret)")
+    ap.add_argument("--ops", nargs="*", default=["matmul", "linear"])
+    ap.add_argument("--cache", default="results/autotune_cache.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny shapes, few iterations")
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--verify", action="store_true",
+                    help="after saving, reload the cache from disk and "
+                         "assert a measured election")
+    args = ap.parse_args()
+
+    from repro.core import autotune as AT
+    cache = AT.AutotuneCache.load(args.cache)   # merge into prior runs
+    rows: List[Tuple[str, float, str]] = []
+    for backend in args.backend or ["pallas_interpret"]:
+        rows += tune(backend, args.ops, tiny=args.tiny,
+                     warmup=args.warmup, iters=args.iters, cache=cache)
+    cache.save(args.cache)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[autotune] wrote {len(cache)} measurements to {args.cache}",
+          file=sys.stderr)
+    if args.verify:
+        return verify_cache(args.cache)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

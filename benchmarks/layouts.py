@@ -11,11 +11,18 @@ Two tables, both on whatever device jax defaults to:
 The derived column reports the measured winner and what each registered
 backend's ``preferred_layout`` would have elected, so drift between the
 model and the data is visible in every benchmark run.
+
+``python -m benchmarks.layouts --apply`` closes the loop (the PR 2
+follow-up): the measured winners replace every registered backend's static
+layout strings for the session via ``set_layout_preference``, so subsequent
+``assign_layouts`` runs elect what the data elected.
 """
 from __future__ import annotations
 
+import argparse
 import functools
-from typing import List, Tuple
+import sys
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,9 +61,13 @@ def _backend_prefs(kind: str) -> str:
                     for n, b in sorted(available_backends().items()))
 
 
-def csv_rows() -> List[Tuple[str, float, str]]:
+def bench() -> Tuple[List[Tuple[str, float, str]], Dict[str, str]]:
+    """Benchmark rows plus the overall measured winners, elected by total
+    time across the shape sweep: {'linear': 'oi'|'io', 'conv': 'nchw'|'nhwc'}.
+    """
     rng = np.random.default_rng(0)
     rows: List[Tuple[str, float, str]] = []
+    totals = {"oi": 0.0, "io": 0.0, "nchw": 0.0, "nhwc": 0.0}
 
     for b, d_in, d_out in ((32, 1024, 1024), (8, 4096, 512)):
         x = jnp.asarray(rng.standard_normal((b, d_in)), jnp.float32)
@@ -64,6 +75,8 @@ def csv_rows() -> List[Tuple[str, float, str]]:
         w_io = w_oi.T
         t_oi = _time(lambda: _linear_oi(x, w_oi))
         t_io = _time(lambda: _linear_io(x, w_io))
+        totals["oi"] += t_oi
+        totals["io"] += t_io
         win = "oi" if t_oi <= t_io else "io"
         tag = f"linear_{b}x{d_in}x{d_out}"
         rows.append((f"layout_{tag}_oi", t_oi, ""))
@@ -80,9 +93,65 @@ def csv_rows() -> List[Tuple[str, float, str]]:
                                      ("NCHW", "OIHW", "NCHW")))
         t_nhwc = _time(lambda: _conv(x_nhwc, w_hwio,
                                      ("NHWC", "HWIO", "NHWC")))
+        totals["nchw"] += t_nchw
+        totals["nhwc"] += t_nhwc
         win = "nchw" if t_nchw <= t_nhwc else "nhwc"
         tag = f"conv_{b}x{c_in}to{c_out}x{hw}"
         rows.append((f"layout_{tag}_nchw", t_nchw, ""))
         rows.append((f"layout_{tag}_nhwc", t_nhwc,
                      f"faster={win};{_backend_prefs('conv')}"))
-    return rows
+    winners = {
+        "linear": "oi" if totals["oi"] <= totals["io"] else "io",
+        "conv": "nchw" if totals["nchw"] <= totals["nhwc"] else "nhwc",
+    }
+    return rows, winners
+
+
+def csv_rows() -> List[Tuple[str, float, str]]:
+    return bench()[0]
+
+
+def apply_measured(winners: Dict[str, str]) -> Dict[str, str]:
+    """Write the measured layout winners into every registered backend for
+    the session (the --apply flag).  Returns {backend: 'old→new'} for the
+    preferences that actually changed."""
+    from repro.backends import (available_backends, get_backend,
+                                set_layout_preference)
+    changes: Dict[str, str] = {}
+    for name in sorted(available_backends()):
+        before = get_backend(name)
+        set_layout_preference(name, linear=winners["linear"],
+                              conv=winners["conv"])
+        after = get_backend(name)
+        diff = []
+        if before.linear_weight_layout != after.linear_weight_layout:
+            diff.append(f"linear:{before.linear_weight_layout}"
+                        f"→{after.linear_weight_layout}")
+        if before.conv_layout != after.conv_layout:
+            diff.append(f"conv:{before.conv_layout}→{after.conv_layout}")
+        if diff:
+            changes[name] = ",".join(diff)
+    return changes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--apply", action="store_true",
+                    help="write the measured winners into the backend "
+                         "registry for this session")
+    args = ap.parse_args()
+    rows, winners = bench()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[layouts] measured winners: {winners}", file=sys.stderr)
+    if args.apply:
+        changes = apply_measured(winners)
+        print(f"[layouts] applied to registry; changed: "
+              f"{changes or 'nothing (static strings already agree)'}",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

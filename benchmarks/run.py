@@ -6,13 +6,17 @@ tables).  Prints ``name,us_per_call,derived`` CSV.
   training    paper Fig. 3 right (B=16/64, reference vs SOL)
   roofline    deliverable (g): per (arch × shape) terms from the dry-run
   layouts     oi/io Linear and NCHW/NHWC Conv timings driving assign_layouts
+  matmul      tiled Pallas MXU matmul vs the einsum reference
+  autotune    measured per-impl timings (tiny sweep) feeding the cache
   serving     beyond-paper decode throughput smoke
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...] [--json PATH]
 
 ``--json PATH`` additionally writes the rows as a JSON document (the
 ``BENCH_*.json`` series CI uploads as an artifact, so the perf trajectory
-accumulates across commits).
+accumulates across commits).  When the ``matmul`` table ran, a sibling
+``BENCH_matmul.json`` is emitted with just those rows, so the matmul perf
+trajectory has its own stable-named data points.
 
 Exits non-zero if any requested table raises, so CI can gate on the smoke
 step instead of silently shipping a partial CSV.
@@ -20,6 +24,7 @@ step instead of silently shipping a partial CSV.
 from __future__ import annotations
 
 import json
+import os
 import sys
 import traceback
 
@@ -40,6 +45,12 @@ def _table_rows(name: str):
     if name == "layouts":
         from . import layouts
         return layouts.csv_rows()
+    if name == "matmul":
+        from . import autotune
+        return autotune.matmul_rows()
+    if name == "autotune":
+        from . import autotune
+        return autotune.csv_rows()
     if name == "serving":
         from . import serving
         return serving.decode_bench()
@@ -58,11 +69,14 @@ def main() -> int:
             return 2
         argv = argv[:i] + argv[i + 2:]
     which = argv or ["effort", "inference", "training",
-                     "roofline", "layouts", "serving"]
+                     "roofline", "layouts", "matmul", "autotune", "serving"]
     rows, failed = [], []
+    per_table = {}
     for name in which:
         try:
-            rows += _table_rows(name)
+            table = _table_rows(name)
+            per_table[name] = table
+            rows += table
         except Exception:
             failed.append(name)
             print(f"[benchmarks] table {name!r} FAILED:", file=sys.stderr)
@@ -80,6 +94,16 @@ def main() -> int:
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"[benchmarks] wrote {json_path}", file=sys.stderr)
+        if per_table.get("matmul"):
+            side = os.path.join(os.path.dirname(json_path) or ".",
+                                "BENCH_matmul.json")
+            with open(side, "w") as f:
+                json.dump({"tables": ["matmul"],
+                           "rows": [{"name": n, "us_per_call": us,
+                                     "derived": d}
+                                    for n, us, d in per_table["matmul"]]},
+                          f, indent=2)
+            print(f"[benchmarks] wrote {side}", file=sys.stderr)
     if failed:
         print(f"[benchmarks] failed tables: {', '.join(failed)}",
               file=sys.stderr)

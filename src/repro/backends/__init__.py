@@ -1,10 +1,10 @@
 from .registry import (Backend, HardwareSpec, Impl, available_backends,
                        candidates, get_backend, get_impl, register_backend,
                        register_impl, register_reference_impl,
-                       register_shared_impl, resolve)
+                       register_shared_impl, resolve, set_layout_preference)
 from . import host_cpu as _host_cpu   # registers the host_cpu backend
 
 __all__ = ["Backend", "HardwareSpec", "Impl", "available_backends",
            "candidates", "get_backend", "get_impl", "register_backend",
            "register_impl", "register_reference_impl",
-           "register_shared_impl", "resolve"]
+           "register_shared_impl", "resolve", "set_layout_preference"]

@@ -192,6 +192,7 @@ def _load_entry_points() -> None:
         from ..kernels.avgpool import ops as _a              # noqa: F401
         from ..kernels.dfp_fused import ops as _d            # noqa: F401
         from ..kernels.flash_attention import ops as _f      # noqa: F401
+        from ..kernels.matmul import ops as _m               # noqa: F401
         from ..kernels.rglru_scan import ops as _g           # noqa: F401
         from ..kernels.rwkv6_scan import ops as _r           # noqa: F401
     except BaseException:
@@ -271,6 +272,18 @@ def get_backend(name: str) -> Backend:
     return _REGISTRY[name]
 
 
+def set_layout_preference(name: str, *, linear: Optional[str] = None,
+                          conv: Optional[str] = None) -> Backend:
+    """Session-scoped layout override: re-register ``name`` with measured
+    layout winners (``benchmarks/layouts.py --apply`` feeds the benchmark's
+    elected layouts back here, replacing the static strings)."""
+    b = get_backend(name)
+    return register_backend(dataclasses.replace(
+        b,
+        linear_weight_layout=linear or b.linear_weight_layout,
+        conv_layout=conv or b.conv_layout))
+
+
 def available_backends() -> Dict[str, Backend]:
     return dict(_REGISTRY)
 
@@ -286,14 +299,15 @@ register_backend(Backend(
     capabilities=frozenset({"xla"}),
 ))
 
-# TPU Pallas kernels validated on CPU via interpret mode.
+# TPU Pallas kernels validated on CPU via interpret mode — including the
+# MXU matmul path, so 'mxu'-gated impls are electable and testable off-TPU.
 register_backend(Backend(
     name="pallas_interpret",
     interpret=True,
     hw=TPU_V5E,
     linear_weight_layout="io",  # paper: (in,out) on the long-vector machine;
     conv_layout="nhwc",         # TPU prefers minor-most channels (lane dim)
-    capabilities=frozenset({"xla", "pallas"}),
+    capabilities=frozenset({"xla", "pallas", "mxu"}),
 ))
 
 # Real-TPU backend: same kernels, compiled.

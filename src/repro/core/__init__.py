@@ -1,4 +1,4 @@
 """SOL core: graph IR, compiler passes, executor, and the sol.optimize API."""
-from . import ir, passes, executor
+from . import autotune, ir, passes, executor
 
-__all__ = ["ir", "passes", "executor"]
+__all__ = ["autotune", "ir", "passes", "executor"]

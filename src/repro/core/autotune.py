@@ -1,0 +1,271 @@
+"""Measured autotuning (ROADMAP: per-backend autotune cache).
+
+AutoTVM/Ansor-style closed loop for the paper's "pick the best impl per
+device" story: instead of trusting the analytical roofline alone, the
+benchmark driver (``benchmarks/autotune.py``) times every registered impl of
+an op through the dispatch table and persists the results here; the election
+pass (``passes.elect_implementations``) prefers those measurements and falls
+back to the (optionally calibrated) roofline when the cache is cold.
+
+Cache keying — (op kind, canonicalized shape bucket, dtype, backend, impl):
+
+* shapes canonicalize to **nearest-power-of-two buckets** per dim, so one
+  measurement covers a neighbourhood of shapes and the file stays small;
+* unseen buckets resolve by **nearest-bucket lookup**: among same-rank
+  buckets for the same (op, dtype, backend), minimize L1 distance in
+  log2-space;
+* LINEAR/MATMUL key on the problem (M, K, N) — leading batch dims collapse
+  into M — every other op keys on its output shape.
+
+File format (JSON, schema-versioned):
+
+    {"schema": 1,
+     "entries": {"matmul|float32|pallas_tpu|256x256x256":
+                   {"pallas.matmul_mxu": {"us": 12.3,
+                                          "config": [128, 128, 128],
+                                          "flops": 3.4e7, "nbytes": 7.9e5},
+                    "ref.matmul": {"us": 20.1, ...}}},
+     "calibration": {"pallas_tpu": {"matmul":
+                   {"s_per_flop": 5e-15, "s_per_byte": 1.2e-12, "n": 6}}}}
+
+Determinism guarantees: ``save`` is atomic (tmp + ``os.replace``), and a file
+whose ``schema`` does not match :data:`SCHEMA_VERSION` is *ignored* on load
+(the cache comes back empty with ``stale=True``), never misread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+# process-wide cache consulted by the election pass; empty unless the user
+# opts in via SOL_AUTOTUNE_CACHE or set_cache()/load_cache()
+_CACHE: Optional["AutotuneCache"] = None
+
+EntryKey = Tuple[str, str, str]                  # (op, dtype, backend)
+Bucket = Tuple[int, ...]
+
+
+def bucket_dim(d: int) -> int:
+    """Nearest power of two (ties round up via round-half-even on the log)."""
+    if d <= 1:
+        return 1
+    return 2 ** int(round(math.log2(d)))
+
+
+def bucket_shape(shape: Tuple[int, ...]) -> Bucket:
+    return tuple(bucket_dim(int(d)) for d in shape)
+
+
+def node_shape(node) -> Optional[Tuple[int, ...]]:
+    """The shape a node is keyed under.  LINEAR/MATMUL → (M, K, N) with
+    leading batch dims folded into M; everything else → the output shape."""
+    from .ir import OpKind
+    if node.op in (OpKind.LINEAR, OpKind.MATMUL):
+        xs = node.inputs[0].spec.shape if node.inputs else ()
+        if not xs or not node.spec.shape:
+            return None
+        k = xs[-1]
+        m = 1
+        for d in xs[:-1]:
+            m *= d
+        return (m, k, node.spec.shape[-1])
+    return tuple(node.spec.shape) or None
+
+
+@dataclasses.dataclass
+class Measurement:
+    us: float                                    # best measured wall time
+    config: Optional[Tuple[int, ...]] = None     # winning tunable config
+    flops: float = 0.0                           # analytic terms of the node
+    nbytes: float = 0.0                          # bytes for this impl's
+                                                 # memory mode (calibration)
+
+    def to_json(self) -> dict:
+        d = {"us": self.us}
+        if self.config is not None:
+            d["config"] = list(self.config)
+        if self.flops:
+            d["flops"] = self.flops
+        if self.nbytes:
+            d["nbytes"] = self.nbytes
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Measurement":
+        cfg = d.get("config")
+        return cls(us=float(d["us"]),
+                   config=tuple(cfg) if cfg else None,
+                   flops=float(d.get("flops", 0.0)),
+                   nbytes=float(d.get("nbytes", 0.0)))
+
+
+class AutotuneCache:
+    """Persistent per-(op, shape bucket, dtype, backend, impl) timings."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.stale = False      # a schema-mismatched file was ignored on load
+        self._entries: Dict[EntryKey, Dict[Bucket, Dict[str, Measurement]]] = {}
+        self._calibration: Dict[Tuple[str, str], Dict[str, float]] = {}
+
+    # -- measurements -------------------------------------------------------
+
+    def record(self, op: str, shape: Tuple[int, ...], dtype: str,
+               backend: str, impl: str, us: float, *,
+               config: Optional[Tuple[int, ...]] = None,
+               flops: float = 0.0, nbytes: float = 0.0) -> None:
+        """Keep the best (lowest) time per (key, bucket, impl)."""
+        bucket = bucket_shape(shape)
+        per = self._entries.setdefault((op, dtype, backend), {}) \
+                           .setdefault(bucket, {})
+        prev = per.get(impl)
+        if prev is None or us < prev.us:
+            per[impl] = Measurement(us=float(us),
+                                    config=tuple(config) if config else None,
+                                    flops=float(flops), nbytes=float(nbytes))
+
+    def lookup(self, op: str, shape: Optional[Tuple[int, ...]], dtype: str,
+               backend: str) -> Dict[str, Measurement]:
+        """Measurements for the exact bucket, else the nearest same-rank
+        bucket (L1 in log2-space), else {}."""
+        if shape is None:
+            return {}
+        buckets = self._entries.get((op, dtype, backend))
+        if not buckets:
+            return {}
+        want = bucket_shape(shape)
+        hit = buckets.get(want)
+        if hit is not None:
+            return dict(hit)
+        same_rank = [b for b in buckets if len(b) == len(want)]
+        if not same_rank:
+            return {}
+
+        def dist(b: Bucket) -> float:
+            return sum(abs(math.log2(x) - math.log2(y))
+                       for x, y in zip(b, want))
+
+        return dict(buckets[min(same_rank, key=dist)])
+
+    def entries(self) -> List[Tuple[EntryKey, Bucket, str, Measurement]]:
+        """Flat iteration for the calibration fit and reporting."""
+        out = []
+        for key, buckets in sorted(self._entries.items()):
+            for bucket, impls in sorted(buckets.items()):
+                for impl, m in sorted(impls.items()):
+                    out.append((key, bucket, impl, m))
+        return out
+
+    def __len__(self) -> int:
+        return sum(len(impls) for buckets in self._entries.values()
+                   for impls in buckets.values())
+
+    # -- calibration coefficients -------------------------------------------
+
+    def set_calibration(self, backend: str, op: str,
+                        coeffs: Dict[str, float]) -> None:
+        self._calibration[(backend, op)] = dict(coeffs)
+
+    def calibration(self, backend: str, op: str) -> Optional[Dict[str, float]]:
+        return self._calibration.get((backend, op))
+
+    def calibrations(self) -> Dict[Tuple[str, str], Dict[str, float]]:
+        return dict(self._calibration)
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_json(self) -> dict:
+        entries = {}
+        for (op, dtype, backend), buckets in sorted(self._entries.items()):
+            for bucket, impls in sorted(buckets.items()):
+                key = "|".join((op, dtype, backend,
+                                "x".join(str(d) for d in bucket)))
+                entries[key] = {impl: m.to_json()
+                                for impl, m in sorted(impls.items())}
+        calibration: Dict[str, Dict[str, dict]] = {}
+        for (backend, op), coeffs in sorted(self._calibration.items()):
+            calibration.setdefault(backend, {})[op] = coeffs
+        return {"schema": SCHEMA_VERSION, "entries": entries,
+                "calibration": calibration}
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Atomic write: serialize to a tmp file in the target directory,
+        then ``os.replace`` — readers never observe a torn cache."""
+        path = path or self.path
+        if not path:
+            raise ValueError("no cache path given")
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self.path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "AutotuneCache":
+        """Load a cache file; a missing file or one written by a different
+        schema version yields an *empty* cache (``stale=True`` for the
+        latter) rather than an error or a misread."""
+        cache = cls(path)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return cache
+        if doc.get("schema") != SCHEMA_VERSION:
+            cache.stale = True
+            return cache
+        for key, impls in doc.get("entries", {}).items():
+            parts = key.split("|")
+            if len(parts) != 4:
+                continue
+            op, dtype, backend, bucket_s = parts
+            bucket = tuple(int(d) for d in bucket_s.split("x"))
+            per = cache._entries.setdefault((op, dtype, backend), {}) \
+                                .setdefault(bucket, {})
+            for impl, m in impls.items():
+                per[impl] = Measurement.from_json(m)
+        for backend, ops in doc.get("calibration", {}).items():
+            for op, coeffs in ops.items():
+                cache._calibration[(backend, op)] = {
+                    k: float(v) for k, v in coeffs.items()}
+        return cache
+
+
+# ---------------------------------------------------------------------------
+# process-wide cache
+# ---------------------------------------------------------------------------
+
+def get_cache() -> AutotuneCache:
+    """The cache the election pass consults.  Starts empty; a warm cache is
+    an explicit opt-in (SOL_AUTOTUNE_CACHE env var, or load_cache/set_cache),
+    so elections stay deterministic by default."""
+    global _CACHE
+    if _CACHE is None:
+        path = os.environ.get("SOL_AUTOTUNE_CACHE")
+        _CACHE = AutotuneCache.load(path) if path else AutotuneCache()
+    return _CACHE
+
+
+def set_cache(cache: Optional[AutotuneCache]) -> Optional[AutotuneCache]:
+    global _CACHE
+    _CACHE = cache
+    return cache
+
+
+def load_cache(path: str) -> AutotuneCache:
+    """Load ``path`` and install it as the process-wide cache."""
+    return set_cache(AutotuneCache.load(path))

@@ -29,13 +29,20 @@ Array = jax.Array
 # individual op lowerings (the reference tier)
 # ---------------------------------------------------------------------------
 
+def linear_weight_kn(n: Node, w: Array) -> Array:
+    """Normalize a Linear weight to the (K=in, N=out) contraction
+    orientation.  Params are stored (out,in) framework-style; the single
+    home of the orientation heuristic, shared with the MXU matmul impl."""
+    return w.T if w.shape[0] == n.attrs["out_features"] else w
+
+
 def _lower_linear(n: Node, x: Array, w: Array, b: Array | None,
                   backend: "registry.Backend") -> Array:
     # layout pass decides operand order: 'oi' keeps (out,in) and contracts on
     # the last dim of both; 'io' stores (in,out) — fewer transposes for
     # backends whose matmul wants the reduction dim major (paper Sec. III-A).
     if n.layout == "io":
-        y = jnp.einsum("...i,io->...o", x, w.T if w.shape[0] == n.attrs["out_features"] else w)
+        y = jnp.einsum("...i,io->...o", x, linear_weight_kn(n, w))
     else:
         wt = w if w.shape[0] == n.attrs["out_features"] else w.T
         y = jnp.einsum("...i,oi->...o", x, wt)

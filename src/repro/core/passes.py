@@ -269,16 +269,27 @@ def _node_cost_terms(n: Node) -> Tuple[float, float, float]:
 def elect_implementations(g: Graph, backend: "object") -> Graph:
     """Cost-based per-node impl election over the backend dispatch table.
 
-    Replaces the old global 'flavour' flags: every node is annotated with the
-    impl whose roofline time (``HardwareSpec.roofline_s``) is lowest among the
-    admissible candidates; ties break toward the more specific tier.  The
+    Measurements beat models (the AutoTVM/Ansor lesson): when the autotune
+    cache (``core.autotune``) holds timings for this (op, shape bucket,
+    dtype, backend), the candidate with the best *measured* time wins and
+    the node is tagged with ``'measured'`` provenance — including any tuned
+    kernel config the measurement carried (``node.attrs['mxu_block']``).
+
+    Cold cache falls back to the analytical path: every admissible impl is
+    costed with the backend's ``HardwareSpec`` roofline terms — scaled by
+    calibrated per-(backend, op) coefficients when ``benchmarks/calibrate``
+    has fit them (``'calibrated'`` provenance, else ``'analytical'``) — and
+    the cheapest wins; ties break toward the more specific tier.  The
     executor honours ``node.impl`` and falls back along the chain when the
     annotation is absent or inadmissible (e.g. the graph is re-lowered on a
     different backend)."""
     from ..backends import registry as R
+    from . import autotune
 
+    cache = autotune.get_cache()
     elections: Dict[str, int] = {}
     by_op: Dict[str, Dict[str, int]] = {}
+    provenance: Dict[str, Dict[str, int]] = {}
     for n in g.topo():
         if n.op in SOURCE_OPS or n.op is OpKind.OUTPUT:
             continue
@@ -287,18 +298,44 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
             raise NotImplementedError(
                 f"no implementation of {n.op} for backend {backend.name!r}")
         flops, streamed, roundtrip = _node_cost_terms(n)
+        by_name = {c.name: c for c in cands}
+        measured = {name: m for name, m in cache.lookup(
+            n.op.value, autotune.node_shape(n), n.spec.dtype,
+            backend.name).items() if name in by_name}
 
-        def cost(impl: "R.Impl") -> Tuple[float, int]:
-            nbytes = roundtrip if impl.memory == "roundtrip" else streamed
-            return (backend.hw.roofline_s(flops, nbytes), impl.tier)
+        if measured:
+            best_name = min(measured,
+                            key=lambda nm: (measured[nm].us,
+                                            by_name[nm].tier))
+            best = by_name[best_name]
+            if measured[best_name].config:
+                n.attrs["mxu_block"] = tuple(measured[best_name].config)
+            else:           # re-election must not leave a stale tuned config
+                n.attrs.pop("mxu_block", None)
+            source = "measured"
+        else:
+            n.attrs.pop("mxu_block", None)
+            cal = cache.calibration(backend.name, n.op.value)
 
-        best = min(cands, key=cost)
+            def cost(impl: "R.Impl") -> Tuple[float, int]:
+                nbytes = roundtrip if impl.memory == "roundtrip" else streamed
+                if cal:
+                    t = cal["s_per_flop"] * flops + cal["s_per_byte"] * nbytes
+                else:
+                    t = backend.hw.roofline_s(flops, nbytes)
+                return (t, impl.tier)
+
+            best = min(cands, key=cost)
+            source = "calibrated" if cal else "analytical"
         n.impl = best.name
         elections[best.name] = elections.get(best.name, 0) + 1
         per = by_op.setdefault(n.op.value, {})
         per[best.name] = per.get(best.name, 0) + 1
+        src = provenance.setdefault(best.name, {})
+        src[source] = src.get(source, 0) + 1
     g.elections = elections
     g.elections_by_op = by_op
+    g.election_provenance = provenance
     return g
 
 

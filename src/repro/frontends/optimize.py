@@ -64,11 +64,21 @@ class SolModel(nn.Module):
     def stats(self) -> Dict[str, int]:
         return self.graph.stats()
 
-    def impl_report(self, by_kind: bool = False) -> Dict[str, Any]:
+    def impl_report(self, by_kind: bool = False,
+                    provenance: bool = False) -> Dict[str, Any]:
         """Elected-implementation report.  Default: a flat histogram
         (impl name → node count).  With ``by_kind=True``: a per-OpKind
         breakdown ``{op value → {impl name → count}}`` showing which flavour
-        the election pass chose for each kind of node on this backend."""
+        the election pass chose for each kind of node on this backend.
+        With ``provenance=True``: ``{impl name → {"count": n, "sources":
+        {"measured"|"calibrated"|"analytical" → n}}}`` — whether each
+        election came from autotune-cache measurements or the cost model."""
+        if provenance:
+            prov = getattr(self.graph, "election_provenance", {})
+            return {name: {"count": count,
+                           "sources": dict(prov.get(name, {}))}
+                    for name, count in
+                    getattr(self.graph, "elections", {}).items()}
         if by_kind:
             return {op: dict(impls) for op, impls in
                     getattr(self.graph, "elections_by_op", {}).items()}

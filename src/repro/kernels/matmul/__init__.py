@@ -1,0 +1,4 @@
+from .kernel import default_block, tile_space
+from .ops import matmul
+
+__all__ = ["matmul", "default_block", "tile_space"]

@@ -1,0 +1,83 @@
+"""Public wrapper + dispatch-table entries for the tiled MXU matmul.
+
+Registered for the 'mxu' capability on LINEAR and MATMUL — the first kernel
+that actually uses the capability ``pallas_tpu`` has always advertised.  The
+election pass may pin a measured tile config on the node
+(``node.attrs['mxu_block']``, written from the autotune cache); absent that,
+``default_block`` keys the tile off the backend's ``HardwareSpec.mxu_dim``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from ...backends import registry
+from ...core.ir import Node, OpKind
+from .kernel import Block, default_block, matmul_call
+
+_FLOAT_DTYPES = ("float32", "bfloat16", "float16")
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul(x: jax.Array, w: jax.Array, *,
+           block: Optional[Block] = None,
+           interpret: bool = False) -> jax.Array:
+    """x: (..., K) @ w: (K, N) → (..., N); leading dims collapse into M."""
+    lead = x.shape[:-1]
+    y = matmul_call(x.reshape((-1, x.shape[-1])), w,
+                    block=block, interpret=interpret)
+    return y.reshape(lead + (w.shape[-1],))
+
+
+def _node_block(n: Node, backend: "registry.Backend",
+                m: int, k: int, nn: int) -> Block:
+    cfg = n.attrs.get("mxu_block")
+    if cfg:
+        return tuple(cfg)
+    return default_block(m, k, nn, backend.hw.mxu_dim)
+
+
+def _matmul_impl(n: Node, vals: Sequence[jax.Array],
+                 backend: "registry.Backend") -> jax.Array:
+    x, w = vals[0], vals[1]
+    blk = _node_block(n, backend, x.size // x.shape[-1], w.shape[0],
+                      w.shape[1])
+    return matmul(x, w, block=blk, interpret=backend.interpret)
+
+
+def _linear_impl(n: Node, vals: Sequence[jax.Array],
+                 backend: "registry.Backend") -> jax.Array:
+    from ...core.executor import linear_weight_kn
+    x, w = vals[0], linear_weight_kn(n, vals[1])  # kernel wants (K, N)
+    blk = _node_block(n, backend, x.size // x.shape[-1], w.shape[0],
+                      w.shape[1])
+    y = matmul(x, w, block=blk, interpret=backend.interpret)
+    if len(vals) > 2 and vals[2] is not None:
+        y = y + vals[2]
+    return y
+
+
+def _floats(n: Node) -> bool:
+    return (n.spec.dtype in _FLOAT_DTYPES
+            and all(i.spec.dtype == n.spec.dtype for i in n.inputs[:2]))
+
+
+def _supports_matmul(n: Node) -> bool:
+    return (len(n.inputs) >= 2 and len(n.inputs[1].spec.shape) == 2
+            and len(n.inputs[0].spec.shape) >= 2 and _floats(n))
+
+
+def _supports_linear(n: Node) -> bool:
+    return (len(n.inputs) >= 2 and len(n.inputs[1].spec.shape) == 2
+            and len(n.inputs[0].spec.shape) >= 2 and _floats(n)
+            and "out_features" in n.attrs)
+
+
+registry.register_shared_impl(
+    OpKind.MATMUL, _matmul_impl, name="pallas.matmul_mxu",
+    requires=("mxu",), supports=_supports_matmul)
+registry.register_shared_impl(
+    OpKind.LINEAR, _linear_impl, name="pallas.linear_mxu",
+    requires=("mxu",), supports=_supports_linear)

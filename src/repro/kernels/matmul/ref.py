@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled MXU matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., K) @ w: (K, N) — einsum with f32 accumulation, matching the
+    kernel's preferred_element_type."""
+    return jnp.einsum("...k,kn->...n", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -3,3 +3,16 @@ import os
 # tests run on the single real CPU device; ONLY launch/dryrun.py forces the
 # 512-device host platform (before any jax import), never the test suite.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _cold_autotune_cache():
+    """Pin an empty autotune cache for the whole suite: a developer's
+    exported SOL_AUTOTUNE_CACHE must not flip elections inside tests
+    (set_cache(None) would re-read the env var on the next get_cache)."""
+    from repro.core import autotune
+    autotune.set_cache(autotune.AutotuneCache())
+    yield
+    autotune.set_cache(None)

@@ -1,0 +1,284 @@
+"""Autotune subsystem tests: cache round-trip + schema/atomicity guarantees,
+shape-bucket canonicalization with nearest-bucket lookup, measured-first
+election (provenance, config pinning, the roofline-contradicting flip), the
+calibration fit, and the MXU matmul as the elected LINEAR/MATMUL flavour."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core import autotune, ir, passes
+from repro.core.autotune import AutotuneCache, Measurement, bucket_shape
+from repro.core.executor import lower_graph
+from repro.core.ir import Graph, Node, OpKind, TensorSpec
+from repro.frontends import nn
+from repro.frontends.optimize import optimize
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    """Every test starts (and leaves the process) with a cold session cache.
+    An explicit empty AutotuneCache, not set_cache(None): None means 'reset
+    to default', which would re-read SOL_AUTOTUNE_CACHE from the env."""
+    autotune.set_cache(AutotuneCache())
+    yield
+    autotune.set_cache(AutotuneCache())
+
+
+def _linear_graph(b=2, d_in=16, d_out=32):
+    x = ir.input_node((b, d_in), name="x")
+    w = ir.param_node((d_out, d_in), name="w")
+    lin = Node(OpKind.LINEAR, [x, w], TensorSpec((b, d_out)),
+               attrs={"out_features": d_out})
+    return Graph([x], [lin], {"w": w}), lin
+
+
+# -- cache mechanics -----------------------------------------------------------
+
+def test_cache_roundtrip(tmp_path):
+    """save → load preserves measurements, configs, and calibration."""
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache()
+    c.record("matmul", (256, 256, 256), "float32", "pallas_tpu",
+             "pallas.matmul_mxu", 12.5, config=(128, 128, 128),
+             flops=2 * 256 ** 3, nbytes=3 * 256 * 256 * 4)
+    c.record("matmul", (256, 256, 256), "float32", "pallas_tpu",
+             "ref.matmul", 20.0)
+    c.set_calibration("pallas_tpu", "matmul",
+                      {"s_per_flop": 1e-14, "s_per_byte": 2e-12, "n": 2.0})
+    c.save(path)
+    assert not any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+    c2 = AutotuneCache.load(path)
+    assert not c2.stale
+    got = c2.lookup("matmul", (256, 256, 256), "float32", "pallas_tpu")
+    assert got["pallas.matmul_mxu"].us == 12.5
+    assert got["pallas.matmul_mxu"].config == (128, 128, 128)
+    assert got["ref.matmul"].us == 20.0
+    assert c2.calibration("pallas_tpu", "matmul")["s_per_flop"] == 1e-14
+
+
+def test_stale_schema_ignored_not_misread(tmp_path):
+    """A cache written by a different schema version comes back empty with
+    stale=True — old files are never misinterpreted."""
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({
+        "schema": autotune.SCHEMA_VERSION + 1,
+        "entries": {"matmul|float32|xla|256x256x256":
+                    {"ref.matmul": {"us": 1.0}}}}))
+    c = AutotuneCache.load(str(path))
+    assert c.stale
+    assert len(c) == 0
+    assert c.lookup("matmul", (256, 256, 256), "float32", "xla") == {}
+
+
+def test_corrupt_file_yields_empty_cache(tmp_path):
+    path = tmp_path / "torn.json"
+    path.write_text('{"schema": 1, "entr')      # torn write simulation
+    c = AutotuneCache.load(str(path))
+    assert len(c) == 0 and not c.stale
+
+
+def test_record_keeps_best_time():
+    c = AutotuneCache()
+    c.record("matmul", (64, 64, 64), "float32", "xla", "ref.matmul", 9.0)
+    c.record("matmul", (64, 64, 64), "float32", "xla", "ref.matmul", 5.0,
+             config=(32, 32, 32))
+    c.record("matmul", (64, 64, 64), "float32", "xla", "ref.matmul", 7.0)
+    m = c.lookup("matmul", (64, 64, 64), "float32", "xla")["ref.matmul"]
+    assert m.us == 5.0 and m.config == (32, 32, 32)
+
+
+def test_bucket_canonicalization_and_nearest_lookup():
+    """Shapes bucket to nearest powers of two; unseen buckets resolve to the
+    nearest same-rank bucket in log2-space."""
+    assert bucket_shape((100, 70, 36)) == (128, 64, 32)
+    c = AutotuneCache()
+    c.record("matmul", (256, 256, 256), "float32", "xla", "ref.matmul", 3.0)
+    c.record("matmul", (2048, 2048, 2048), "float32", "xla", "ref.matmul",
+             90.0)
+    # same bucket (250→256)
+    assert c.lookup("matmul", (250, 260, 255), "float32", "xla")[
+        "ref.matmul"].us == 3.0
+    # unseen bucket (4096) → nearest is 2048
+    assert c.lookup("matmul", (4096, 4096, 4096), "float32", "xla")[
+        "ref.matmul"].us == 90.0
+    # other backend/dtype/op stay isolated
+    assert c.lookup("matmul", (256, 256, 256), "bfloat16", "xla") == {}
+    assert c.lookup("matmul", (256, 256, 256), "float32", "host_cpu") == {}
+    assert c.lookup("linear", (256, 256, 256), "float32", "xla") == {}
+
+
+# -- measured election ----------------------------------------------------------
+
+def test_cold_cache_falls_back_to_roofline():
+    """ISSUE acceptance: a cold cache degrades gracefully to the analytical
+    path — the MXU matmul wins on tier at equal roofline cost."""
+    g, lin = _linear_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert lin.impl == "pallas.linear_mxu"
+    assert g.election_provenance["pallas.linear_mxu"] == {"analytical": 1}
+
+
+def test_warm_cache_election_uses_measurement(tmp_path):
+    """save → load → election: the measured entry drives the choice and the
+    provenance says so."""
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache()
+    c.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+             "pallas.linear_mxu", 4.0, config=(16, 128, 128))
+    c.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+             "ref.linear", 9.0)
+    c.save(path)
+    autotune.load_cache(path)
+
+    g, lin = _linear_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert lin.impl == "pallas.linear_mxu"
+    assert g.election_provenance["pallas.linear_mxu"] == {"measured": 1}
+    # the winning measurement's tile config is pinned on the node
+    assert lin.attrs["mxu_block"] == (16, 128, 128)
+
+
+def test_reelection_clears_stale_tile_config():
+    """A graph elected with a warm cache (pinned mxu_block) then re-elected
+    cold must drop the stale tuned config — re-lowering on another backend
+    or cache state is a supported flow."""
+    c = AutotuneCache()
+    c.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+             "pallas.linear_mxu", 4.0, config=(512, 256, 512))
+    autotune.set_cache(c)
+    g, lin = _linear_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert lin.attrs["mxu_block"] == (512, 256, 512)
+
+    autotune.set_cache(AutotuneCache())
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert "mxu_block" not in lin.attrs
+
+    # a measured winner without a config also clears a prior pin
+    lin.attrs["mxu_block"] = (512, 256, 512)
+    c2 = AutotuneCache()
+    c2.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+              "ref.linear", 1.0)
+    autotune.set_cache(c2)
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert lin.impl == "ref.linear" and "mxu_block" not in lin.attrs
+
+
+def test_measured_entry_flips_roofline_choice():
+    """ISSUE acceptance: a cache entry flips a flavour choice the roofline
+    model would not make — ref.linear beats the MXU kernel only because the
+    data says so."""
+    g_cold, lin_cold = _linear_graph()
+    passes.elect_implementations(g_cold, get_backend("pallas_interpret"))
+    assert lin_cold.impl == "pallas.linear_mxu"       # the roofline choice
+
+    c = AutotuneCache()
+    c.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+             "pallas.linear_mxu", 50.0)
+    c.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+             "ref.linear", 2.0)
+    autotune.set_cache(c)
+    g, lin = _linear_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert lin.impl == "ref.linear"
+    assert g.election_provenance["ref.linear"] == {"measured": 1}
+
+
+def test_impl_report_shows_measured_provenance():
+    """ISSUE acceptance: with a warm cache, SolModel.impl_report() shows
+    elections sourced from measurements."""
+    model = nn.mlp_8192(2, 32, 16, 4)
+    c = AutotuneCache()
+    c.record("linear", (2, 16, 32), "float32", "pallas_interpret",
+             "pallas.linear_mxu", 3.0)
+    autotune.set_cache(c)
+    sol = optimize(model, (2, 16), backend="pallas_interpret")
+    report = sol.impl_report(provenance=True)
+    assert report["pallas.linear_mxu"]["sources"].get("measured", 0) >= 1
+
+    autotune.set_cache(AutotuneCache())               # cold again
+    sol_cold = optimize(model, (2, 16), backend="pallas_interpret")
+    cold = sol_cold.impl_report(provenance=True)
+    assert all("measured" not in e["sources"] for e in cold.values())
+
+
+def test_mxu_matmul_elected_and_correct_on_pallas_backends():
+    """ISSUE acceptance: the tiled Pallas matmul is the elected
+    LINEAR/MATMUL flavour for MXU-aligned shapes on pallas_tpu (election)
+    and pallas_interpret (election + execution parity at 1e-5, including a
+    ragged-tail shape)."""
+    for b, d_in, d_out in ((2, 128, 128), (3, 100, 65)):
+        g, lin = _linear_graph(b, d_in, d_out)
+        passes.elect_implementations(g, get_backend("pallas_tpu"))
+        assert lin.impl == "pallas.linear_mxu", (b, d_in, d_out)
+
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(
+            rng.standard_normal((d_out, d_in)), jnp.float32)}
+        x = jnp.asarray(rng.standard_normal((b, d_in)), jnp.float32)
+        ys = {}
+        for bk in ("pallas_interpret", "xla"):
+            g2, lin2 = _linear_graph(b, d_in, d_out)
+            passes.elect_implementations(g2, get_backend(bk))
+            ys[bk] = np.asarray(lower_graph(g2, get_backend(bk))(params, x))
+        assert lin2.impl == "ref.linear"              # xla has no mxu
+        np.testing.assert_allclose(ys["pallas_interpret"], ys["xla"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# -- calibration -----------------------------------------------------------------
+
+def test_calibration_fit_recovers_coefficients():
+    """Synthetic measurements generated from known coefficients are
+    recovered by the non-negative least-squares fit."""
+    from benchmarks.calibrate import fit
+    a_true, b_true = 5e-12, 2e-10
+    c = AutotuneCache()
+    for m in (64, 128, 256, 512):
+        flops = 2.0 * m ** 3
+        nbytes = 3.0 * m * m * 4.0
+        us = (a_true * flops + b_true * nbytes) * 1e6
+        c.record("matmul", (m, m, m), "float32", "xla", "ref.matmul", us,
+                 flops=flops, nbytes=nbytes)
+    coeffs = fit(c)[("xla", "matmul")]
+    assert coeffs["s_per_flop"] == pytest.approx(a_true, rel=1e-3)
+    assert coeffs["s_per_byte"] == pytest.approx(b_true, rel=1e-3)
+    assert coeffs["n"] == 4.0
+
+
+def test_calibrated_cost_model_drives_cold_election():
+    """Calibration coefficients apply when the exact op has no measurement:
+    provenance flips from 'analytical' to 'calibrated'."""
+    c = AutotuneCache()
+    c.set_calibration("pallas_interpret", "linear",
+                      {"s_per_flop": 1e-12, "s_per_byte": 1e-11, "n": 4.0})
+    autotune.set_cache(c)
+    g, lin = _linear_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert lin.impl == "pallas.linear_mxu"            # same relative order
+    assert g.election_provenance["pallas.linear_mxu"] == {"calibrated": 1}
+
+
+# -- the autotune driver (tiny, through the dispatch table) ----------------------
+
+def test_driver_measures_every_admissible_impl(tmp_path):
+    """benchmarks.autotune times each dispatch-table candidate, persists the
+    cache, and a reloaded cache elects from the measurements."""
+    from benchmarks.autotune import tune, verify_cache
+    path = str(tmp_path / "cache.json")
+    cache = AutotuneCache()
+    rows = tune("pallas_interpret", ("linear",), tiny=True,
+                warmup=0, iters=1, cache=cache)
+    names = {r[0] for r in rows}
+    assert any("pallas.linear_mxu" in n for n in names)
+    assert any("ref.linear" in n for n in names)
+    got = cache.lookup("linear", (8, 64, 32), "float32", "pallas_interpret")
+    assert got["pallas.linear_mxu"].config is not None   # tuned tile config
+    assert got["pallas.linear_mxu"].flops > 0            # calibration terms
+    cache.save(path)
+    assert verify_cache(path) == 0
