@@ -2,16 +2,21 @@
 prefers over the roofline model (``core.autotune``).
 
 For each (op, shape) in the sweep it times **every impl the dispatch table
-admits** for the chosen backend; for tunable kernels (the MXU matmul family)
-it additionally sweeps the kernel's tile-config search space and records the
-winner's config next to its time, so a later election can pin it on the node.
+admits** for the chosen backend; for impls that declare a ``Tunable`` (the
+MXU matmul tile space, flash-attention (bq, bk) block sizes, DFP fused-group
+sizing, the RG-LRU channel-block length — whatever the registry declares,
+not a hard-coded list) it additionally sweeps the kernel's config search
+space and records the winner's config next to its time, so a later election
+can pin it on the node.
 
 Run:  PYTHONPATH=src python -m benchmarks.autotune \\
           --backend pallas_interpret --tiny --cache autotune_cache.json --verify
 
-``--verify`` reloads the cache from disk and re-runs the election on a small
-model, failing unless the report shows 'measured' provenance — the
-write → read → election round-trip CI smokes on every commit.
+``--verify`` reloads the cache from disk and re-runs the election on fresh
+graphs, failing unless every tuned (backend, op) shows 'measured' provenance
+— and additionally proves a cached attention block-size measurement flips an
+election, with ``impl_report(provenance=True)`` surfacing the pinned config.
+The write → read → election round-trip CI smokes on every commit.
 """
 from __future__ import annotations
 
@@ -25,41 +30,119 @@ import numpy as np
 
 from .paper_tables import _time
 
-# (M, K, N) problem sweeps; --tiny keeps CI's interpret-mode runs quick
-SHAPES: Dict[str, List[Tuple[int, int, int]]] = {
+# every tunable-kernel family the registry declares gets a sweep entry:
+# (M, K, N) problems for the matmul family, output shapes for the rest;
+# --tiny keeps CI's interpret-mode runs quick
+SHAPES: Dict[str, List[Tuple[int, ...]]] = {
     "matmul": [(256, 256, 256), (512, 512, 512), (128, 512, 256)],
     "linear": [(32, 1024, 1024), (8, 4096, 512)],
+    "attention": [(2, 256, 4, 64), (1, 512, 8, 64)],
+    "fused": [(1024, 512), (4096, 256)],
+    "rglru_scan": [(2, 128, 256), (1, 256, 512)],
+    "rwkv6_scan": [(1, 128, 4, 32)],
+    "avgpool": [(2, 64, 62, 62)],
 }
-TINY_SHAPES: Dict[str, List[Tuple[int, int, int]]] = {
+TINY_SHAPES: Dict[str, List[Tuple[int, ...]]] = {
     "matmul": [(32, 32, 32), (16, 48, 24)],
     "linear": [(8, 64, 32)],
+    "attention": [(1, 64, 2, 16)],
+    "fused": [(64, 32)],
+    "rglru_scan": [(1, 16, 32)],
+    "rwkv6_scan": [(1, 16, 2, 8)],
+    "avgpool": [(1, 8, 10, 10)],
 }
+DEFAULT_OPS = ("matmul", "linear", "attention", "fused", "rglru_scan",
+               "rwkv6_scan", "avgpool")
 
 
-def _node(op: str, shape: Tuple[int, int, int]):
-    """One dispatchable node for an (op, M, K, N) problem."""
+def _node(op: str, shape: Tuple[int, ...]):
+    """One dispatchable node for an (op, shape) problem — also used by
+    ``verify_cache`` to rebuild a node from a cache bucket."""
     from repro.core import ir
     from repro.core.ir import Node, OpKind, TensorSpec
-    m, k, n = shape
     if op == "matmul":
+        m, k, n = shape
         return Node(OpKind.MATMUL,
                     [ir.input_node((m, k)), ir.input_node((k, n))],
                     TensorSpec((m, n)))
     if op == "linear":
+        m, k, n = shape
         return Node(OpKind.LINEAR,
                     [ir.input_node((m, k)), ir.param_node((n, k), name="w")],
                     TensorSpec((m, n)), attrs={"out_features": n})
+    if op == "attention":
+        b, s, h, hd = shape
+        qkv = [ir.input_node((b, s, h, hd), name=nm) for nm in "qkv"]
+        return Node(OpKind.ATTENTION, qkv, TensorSpec((b, s, h, hd)),
+                    attrs={"causal": True})
+    if op == "rglru_scan":
+        b, t, d = shape
+        return Node(OpKind.RGLRU_SCAN,
+                    [ir.input_node((b, t, d), name="a"),
+                     ir.input_node((b, t, d), name="b"),
+                     ir.input_node((b, d), name="h0")],
+                    TensorSpec((b, t, d)))
+    if op == "fused":
+        # a representative DFP chain: gelu → residual add → tanh → scale
+        rows, d = shape
+        x = ir.input_node((rows, d), name="x")
+        spec = TensorSpec((rows, d))
+        g = Node(OpKind.GELU, [x], spec)
+        a = Node(OpKind.ADD, [g, x], spec)
+        t = Node(OpKind.TANH, [a], spec)
+        sc = Node(OpKind.SCALE, [t], spec, attrs={"value": 1.3})
+        return Node(OpKind.FUSED, [x], spec, attrs={"length": 4},
+                    name="fused[gelu+add+tanh+scale]", body=[g, a, t, sc])
+    if op == "rwkv6_scan":
+        b, t, h, hd = shape
+        seq = [(b, t, h, hd)] * 4
+        ins = ([ir.input_node(s, name=nm) for s, nm in zip(seq, "rkvw")]
+               + [ir.input_node((h, hd), name="u"),
+                  ir.input_node((b, h, hd, hd), name="s0")])
+        return Node(OpKind.RWKV6_SCAN, ins, TensorSpec((b, t, h, hd)))
+    if op == "avgpool":
+        # shape is the pooled OUTPUT (what the cache keys on); 3×3 VALID
+        n, c, oh, ow = shape
+        return Node(OpKind.AVGPOOL,
+                    [ir.input_node((n, c, oh + 2, ow + 2), name="x")],
+                    TensorSpec((n, c, oh, ow)),
+                    attrs={"kernel": 3, "stride": 1})
     raise KeyError(f"unknown autotune op {op!r}")
 
 
-def _build(op: str, shape: Tuple[int, int, int]):
+def _build(op: str, shape: Tuple[int, ...]):
     """The node plus concrete operand arrays to time it with."""
-    m, k, n = shape
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    w_shape = (k, n) if op == "matmul" else (n, k)   # linear stores (out,in)
-    w = jnp.asarray(rng.standard_normal(w_shape), jnp.float32)
-    return _node(op, shape), [x, w]
+    node = _node(op, shape)
+
+    def arr(shp, scale=1.0):
+        return jnp.asarray(rng.standard_normal(shp) * scale, jnp.float32)
+
+    if op in ("matmul", "linear"):
+        m, k, n = shape
+        w_shape = (k, n) if op == "matmul" else (n, k)  # linear stores (o,i)
+        return node, [arr((m, k)), arr(w_shape)]
+    if op == "attention":
+        b, s, h, hd = shape
+        return node, [arr((b, s, h, hd)) for _ in range(3)]
+    if op == "rglru_scan":
+        b, t, d = shape
+        a = jnp.asarray(1.0 / (1.0 + np.exp(-rng.standard_normal((b, t, d)))),
+                        jnp.float32)
+        return node, [a, arr((b, t, d), 0.1), arr((b, d), 0.1)]
+    if op == "fused":
+        return node, [arr(shape)]
+    if op == "rwkv6_scan":
+        b, t, h, hd = shape
+        logw = jnp.asarray(-np.exp(rng.standard_normal((b, t, h, hd)) * 0.5),
+                           jnp.float32)
+        return node, [arr((b, t, h, hd), 0.5), arr((b, t, h, hd), 0.5),
+                      arr((b, t, h, hd), 0.5), logw, arr((h, hd), 0.3),
+                      jnp.zeros((b, h, hd, hd), jnp.float32)]
+    if op == "avgpool":
+        n, c, oh, ow = shape
+        return node, [arr((n, c, oh + 2, ow + 2))]
+    raise KeyError(f"unknown autotune op {op!r}")
 
 
 def _time_impl(impl, node, vals: Sequence[jax.Array], backend,
@@ -69,17 +152,17 @@ def _time_impl(impl, node, vals: Sequence[jax.Array], backend,
 
 
 def tune(backend_name: str = "pallas_interpret",
-         ops: Sequence[str] = ("matmul", "linear"), *,
+         ops: Sequence[str] = DEFAULT_OPS, *,
          tiny: bool = False, warmup: int = 2, iters: int = 5,
          cache=None) -> List[Tuple[str, float, str]]:
     """Measure every admissible impl of each (op, shape) through the dispatch
-    table, recording best times (and winning tile configs) into ``cache``.
-    Returns benchmark rows for the CSV/JSON harness."""
+    table — sweeping each impl's declared ``Tunable`` config space — and
+    record best times (plus winning configs) into ``cache``.  Returns
+    benchmark rows for the CSV/JSON harness."""
     from repro.backends import get_backend
     from repro.backends import registry as R
     from repro.core import autotune as AT
     from repro.core.passes import _node_cost_terms
-    from repro.kernels.matmul.kernel import tile_space
 
     backend = get_backend(backend_name)
     cache = cache if cache is not None else AT.get_cache()
@@ -90,18 +173,21 @@ def tune(backend_name: str = "pallas_interpret",
             node, vals = _build(op, shape)
             flops, streamed, roundtrip = _node_cost_terms(node)
             for impl in R.candidates(backend, node):
-                configs: List[Optional[Tuple[int, int, int]]] = [None]
-                if impl.name.endswith("_mxu"):
-                    m, k, n = shape
-                    configs = list(tile_space(m, k, n, backend.hw))
+                tun = impl.tunable
+                configs: List[Optional[Tuple[int, ...]]] = [None]
+                if tun is not None:
+                    space = tun.tune_space(node, backend.hw)
+                    if space:
+                        configs = list(space)
                 best_us, best_cfg = float("inf"), None
                 for cfg in configs:
-                    node.attrs.pop("mxu_block", None)
-                    if cfg is not None:
-                        node.attrs["mxu_block"] = cfg
+                    if tun is not None:
+                        tun.bind_config(node, cfg)
                     us = _time_impl(impl, node, vals, backend, warmup, iters)
                     if us < best_us:
                         best_us, best_cfg = us, cfg
+                if tun is not None:
+                    tun.bind_config(node, None)
                 nbytes = roundtrip if impl.memory == "roundtrip" else streamed
                 cache.record(op, AT.node_shape(node), node.spec.dtype,
                              backend_name, impl.name, best_us,
@@ -142,9 +228,10 @@ def matmul_rows() -> List[Tuple[str, float, str]]:
 
 
 def csv_rows() -> List[Tuple[str, float, str]]:
-    """The ``autotune`` benchmark table: a tiny sweep on the pallas_interpret
-    and host_cpu backends.  Uses a local cache so a benchmark run never
-    perturbs the process-wide election state of the other tables."""
+    """The ``autotune`` benchmark table: a tiny sweep of every tunable
+    kernel family on the pallas_interpret and host_cpu backends.  Uses a
+    local cache so a benchmark run never perturbs the process-wide election
+    state of the other tables."""
     from repro.core.autotune import AutotuneCache
     cache = AutotuneCache()
     rows = []
@@ -153,13 +240,88 @@ def csv_rows() -> List[Tuple[str, float, str]]:
     return rows
 
 
+def _doctored(cache, key, bucket: Tuple[int, ...], impl_name: str,
+              us: float):
+    """A copy of ``cache`` (rebuilt through the public record API) with
+    ``impl_name``'s measurement in (key, bucket) forced to ``us``."""
+    from repro.core import autotune as AT
+    out = AT.AutotuneCache()
+    for k2, b2, nm, m in cache.entries():
+        t = us if (k2 == key and b2 == bucket and nm == impl_name) else m.us
+        op, dtype, backend_name = k2
+        out.record(op, b2, dtype, backend_name, nm, t,
+                   config=m.config, flops=m.flops, nbytes=m.nbytes)
+    return out
+
+
+def attention_flip_proof(cache) -> int:
+    """ISSUE acceptance: a cached attention block-size measurement
+    demonstrably flips an election.  Elects a MultiHeadAttention model under
+    two doctored caches — one where the tuned flash-attention measurement
+    loses, one where it wins — asserts the elected impl changes, and that
+    the winning election pins the measured (bq, bk) config on the node and
+    surfaces it in ``impl_report(provenance=True)``."""
+    from repro.core import autotune as AT
+    from repro.core.ir import OpKind
+    from repro.frontends import nn
+    from repro.frontends.optimize import optimize
+
+    target = None
+    for key, bucket, nm, m in cache.entries():
+        op, dtype, backend_name = key
+        if op == "attention" and dtype == "float32" and m.config:
+            others = [m2.us for _k, b2, nm2, m2 in cache.entries()
+                      if _k == key and b2 == bucket and nm2 != nm]
+            if others:
+                target = (key, bucket, nm, min(others))
+                break
+    if target is None:
+        print("[autotune] no attention bucket holds a tuned config plus a "
+              "competitor to flip against", file=sys.stderr)
+        return 1
+    key, bucket, tuned_impl, best_other_us = target
+    _op, _dtype, backend_name = key
+    b, s, h, hd = bucket
+
+    def elect(c):
+        prev = AT.get_cache()
+        AT.set_cache(c)
+        try:
+            sol = optimize(nn.MultiHeadAttention(h * hd, h), (b, s, h * hd),
+                           backend=backend_name)
+        finally:
+            AT.set_cache(prev)
+        return sol, sol.graph.nodes_of(OpKind.ATTENTION)[0]
+
+    sol_l, node_l = elect(_doctored(cache, key, bucket, tuned_impl,
+                                    2.0 * best_other_us))
+    sol_w, node_w = elect(_doctored(cache, key, bucket, tuned_impl,
+                                    0.5 * best_other_us))
+    rep = sol_w.impl_report(provenance=True)
+    pinned = rep.get(tuned_impl, {}).get("pinned", [])
+    cfg = node_w.attrs.get("attn_block")
+    ok = (node_l.impl != tuned_impl and node_w.impl == tuned_impl
+          and rep.get(tuned_impl, {}).get("sources", {}).get("measured", 0)
+          and cfg is not None and tuple(cfg) in {tuple(p) for p in pinned})
+    print(f"[autotune] attention flip on {backend_name} "
+          f"{'x'.join(str(d) for d in bucket)}: slow measurement elects "
+          f"{node_l.impl}, fast measurement flips to {node_w.impl} with "
+          f"pinned attn_block={cfg}; impl_report(provenance=True) → {rep}")
+    if not ok:
+        print("[autotune] attention flip proof FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
 def verify_cache(path: str) -> int:
     """Reload ``path`` from disk, install it, and prove each tuned
     (backend, op) in the file yields a *measured* election on a fresh graph
-    — the write → read → election round-trip CI runs after tuning."""
+    — plus the attention block-size flip proof above.  CI runs this after
+    tuning."""
     from repro.backends import get_backend
+    from repro.backends import registry as R
     from repro.core import autotune as AT, passes
-    from repro.core.ir import Graph
+    from repro.core.ir import Graph, OpKind
 
     cache = AT.AutotuneCache.load(path)
     if cache.stale:
@@ -181,9 +343,16 @@ def verify_cache(path: str) -> int:
                 node = _node(op, bucket)
             except KeyError:                     # foreign backend / op kind
                 continue
-            g = Graph([node.inputs[0]], [node], {})
+            ins = [i for i in node.inputs if i.op is OpKind.INPUT]
+            g = Graph(ins, [node], {})
             passes.elect_implementations(g, backend)
             tag = f"{backend_name}:{op}→{node.impl}"
+            impl = R.get_impl(node.impl)
+            if impl is not None and impl.tunable is not None:
+                cfg = node.attrs.get(impl.tunable.attr)
+                if cfg:
+                    tag += f"[{impl.tunable.attr}="
+                    tag += "x".join(str(d) for d in cfg) + "]"
             if "measured" in g.election_provenance.get(node.impl, {}):
                 measured.append(tag)
             else:
@@ -196,14 +365,14 @@ def verify_cache(path: str) -> int:
         print(f"[autotune] elections that ignored the cache: {cold}",
               file=sys.stderr)
         return 1
-    return 0
+    return attention_flip_proof(cache)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", action="append",
                     help="backend(s) to tune (default: pallas_interpret)")
-    ap.add_argument("--ops", nargs="*", default=["matmul", "linear"])
+    ap.add_argument("--ops", nargs="*", default=list(DEFAULT_OPS))
     ap.add_argument("--cache", default="results/autotune_cache.json")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny shapes, few iterations")
@@ -211,7 +380,7 @@ def main() -> int:
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--verify", action="store_true",
                     help="after saving, reload the cache from disk and "
-                         "assert a measured election")
+                         "assert measured elections + the attention flip")
     args = ap.parse_args()
 
     from repro.core import autotune as AT

@@ -4,12 +4,20 @@ results/perf_log.jsonl for the §Perf before/after log.
 
   PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen2-1.5b \
       --shape train_4k --tag baseline
+
+Each record also carries the whole-model elementwise profile
+(``ew_flops``/``ew_elements`` from ``hlo_analysis.elementwise_profile``);
+``--calibrate-ew`` fits the accumulated records back onto the DFP cost
+model's per-element FLOP constant (``core.passes.calibrate_ew_flops``,
+replacing the nominal hard-coded 5.0) and prints the SOL_EW_FLOPS export
+that carries the fit into other processes.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -59,15 +67,56 @@ def top_contributors(text: str, n_devices: int, k: int = 8):
             print(f"  {r[0] / unit:10.2f}{u} {' '.join(str(x) for x in r[1:])[:130]}")
 
 
+def ew_samples(log_path: Path = LOG):
+    """(ew_flops, ew_elements) pairs from every perf_log record that carries
+    the elementwise profile — the input to ``passes.calibrate_ew_flops``."""
+    samples = []
+    if not log_path.exists():
+        return samples
+    with log_path.open() as fh:
+        for line in fh:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            f, e = rec.get("ew_flops"), rec.get("ew_elements")
+            if f and e:
+                samples.append((float(f), float(e)))
+    return samples
+
+
+def calibrate_ew(log_path: Path = LOG) -> int:
+    from repro.core import passes
+    samples = ew_samples(log_path)
+    if not samples:
+        print(f"[perf_iter] {log_path} holds no elementwise profiles; run "
+              "a --tag measurement first", file=sys.stderr)
+        return 1
+    old = passes.ew_flops()
+    fitted = passes.calibrate_ew_flops(samples)
+    print(f"[perf_iter] _EW_FLOPS calibrated from {len(samples)} "
+          f"whole-model records: {old:.2f} → {fitted:.2f} FLOPs/element; "
+          f"export SOL_EW_FLOPS={fitted:.4f} to apply in other processes")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--mesh", default="1pod")
-    ap.add_argument("--tag", required=True)
+    ap.add_argument("--tag")
     ap.add_argument("--top", type=int, default=8)
     ap.add_argument("--no-detail", action="store_true")
+    ap.add_argument("--calibrate-ew", action="store_true",
+                    help="fit the DFP per-element FLOP constant from the "
+                         "accumulated perf_log records and stop")
     args = ap.parse_args()
+
+    if args.calibrate_ew:
+        sys.exit(calibrate_ew())
+    if not args.arch or not args.tag:
+        ap.error("--arch and --tag are required unless --calibrate-ew")
 
     from repro.launch.dryrun import lower_cell, memory_summary
     from repro.launch import hlo_analysis as HA
@@ -80,6 +129,7 @@ def main():
     n_dev = mesh.devices.size
     res = HA.analyze(text, n_dev)
     mem = memory_summary(compiled)
+    ew_f, ew_e = res["ew_flops"], res["ew_elements"]
     f, b, i = (res["flops_per_device"], res["hbm_bytes_per_device"],
                res["ici_bytes_per_device"])
     terms = {"compute_s": f / 197e12, "memory_s": b / 819e9,
@@ -88,6 +138,7 @@ def main():
            "mesh": args.mesh, **terms,
            "flops_per_device": f, "hbm_bytes_per_device": b,
            "ici_bytes_per_device": i,
+           "ew_flops": ew_f, "ew_elements": ew_e,
            "temp_bytes": mem.get("temp_size_in_bytes", 0),
            "collectives": res["collectives"],
            "compile_s": round(time.time() - t0, 1)}

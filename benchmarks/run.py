@@ -7,7 +7,9 @@ tables).  Prints ``name,us_per_call,derived`` CSV.
   roofline    deliverable (g): per (arch × shape) terms from the dry-run
   layouts     oi/io Linear and NCHW/NHWC Conv timings driving assign_layouts
   matmul      tiled Pallas MXU matmul vs the einsum reference
-  autotune    measured per-impl timings (tiny sweep) feeding the cache
+  autotune    measured per-impl timings feeding the cache — a tiny sweep of
+              every Tunable kernel family the registry declares (matmul
+              tiles, attention blocks, DFP fusion sizing, scan blocks)
   serving     beyond-paper decode throughput smoke
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...] [--json PATH]

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..core.autotune import Tunable
 from ..core.ir import Node, OpKind
 
 
@@ -111,6 +112,9 @@ class Impl:
     # HBM once per input/output (depth-first); 'roundtrip' impls materialize
     # every intermediate (op-at-a-time composition).
     memory: str = "streamed"
+    # tuning declaration (core.autotune.Tunable): candidate config space +
+    # the node.attrs key measured winners are pinned under
+    tunable: Optional[Tunable] = None
 
     def admissible(self, backend: "Backend", node: Node) -> bool:
         if self.backend is not None and self.backend != backend.name:
@@ -136,11 +140,13 @@ def _index(impl: Impl) -> Impl:
 def register_impl(backend: str, op: OpKind, fn: ImplFn, *,
                   name: Optional[str] = None,
                   supports: Optional[Callable[[Node], bool]] = None,
-                  memory: str = "streamed") -> Impl:
+                  memory: str = "streamed",
+                  tunable: Optional[Tunable] = None) -> Impl:
     """Register a backend-specific implementation (tier 0).  Newest wins
     within the tier, so a later registration overrides an earlier one."""
     impl = _index(Impl(name or f"{backend}.{op.value}", op, fn, TIER_BACKEND,
-                       supports=supports, backend=backend, memory=memory))
+                       supports=supports, backend=backend, memory=memory,
+                       tunable=tunable))
     _BACKEND_IMPLS.setdefault((backend, op), []).insert(0, impl)
     return impl
 
@@ -148,12 +154,13 @@ def register_impl(backend: str, op: OpKind, fn: ImplFn, *,
 def register_shared_impl(op: OpKind, fn: ImplFn, *, name: str,
                          requires: Sequence[str] = (),
                          supports: Optional[Callable[[Node], bool]] = None,
-                         memory: str = "streamed") -> Impl:
+                         memory: str = "streamed",
+                         tunable: Optional[Tunable] = None) -> Impl:
     """Register a shared kernel (tier 1), admitted for any backend whose
     capabilities cover ``requires``."""
     impl = _index(Impl(name, op, fn, TIER_SHARED,
                        requires=frozenset(requires), supports=supports,
-                       memory=memory))
+                       memory=memory, tunable=tunable))
     _SHARED_IMPLS.setdefault(op, []).insert(0, impl)
     return impl
 
@@ -199,6 +206,21 @@ def _load_entry_points() -> None:
         _ENTRY_POINTS_STATE = "unloaded"
         raise
     _ENTRY_POINTS_STATE = "loaded"
+
+
+def tunables_for(op: OpKind) -> List[Tunable]:
+    """Every Tunable any impl (any backend, any tier) declares for ``op`` —
+    the election pass clears all of them before pinning, so re-electing a
+    graph on a backend where the tuned impl is inadmissible still drops the
+    stale pin."""
+    _load_entry_points()
+    out: List[Tunable] = []
+    for (_b, o), impls in _BACKEND_IMPLS.items():
+        if o is op:
+            out += [i.tunable for i in impls if i.tunable is not None]
+    out += [i.tunable for i in _SHARED_IMPLS.get(op, ())
+            if i.tunable is not None]
+    return out
 
 
 def candidates(backend: "Backend", node: Node) -> List[Impl]:

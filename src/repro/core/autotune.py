@@ -7,6 +7,26 @@ an op through the dispatch table and persists the results here; the election
 pass (``passes.elect_implementations``) prefers those measurements and falls
 back to the (optionally calibrated) roofline when the cache is cold.
 
+The Tunable protocol — any kernel, not just the matmul:
+
+A dispatch-table impl may declare a :class:`Tunable` at registration
+(``register_shared_impl(..., tunable=Tunable(attr, space))``):
+
+* ``tune_space(node, hw)`` yields the candidate configs for one node —
+  integer tuples keyed off the backend's ``HardwareSpec`` (MXU tile sizes,
+  attention block sizes, DFP block rows / fusion-split sizes, scan block
+  lengths) and clamped/deduplicated against the node's shape;
+* ``bind_config(node, cfg)`` pins one config on the node under the
+  tunable's ``node.attrs[attr]`` key (``cfg=None`` clears it) — the impl
+  reads the same attr at lowering time, so a pinned election reaches the
+  kernel with zero extra plumbing.
+
+The sweep in ``benchmarks/autotune.py`` iterates whatever the registry
+declares: for every admissible impl it measures each config in the tune
+space and records the winner's config next to its time; the election pass
+re-binds that config whenever the measurement wins (and *clears* every
+candidate's tunable attr first, so re-election never leaves a stale pin).
+
 Cache keying — (op kind, canonicalized shape bucket, dtype, backend, impl):
 
 * shapes canonicalize to **nearest-power-of-two buckets** per dim, so one
@@ -39,7 +59,7 @@ import json
 import math
 import os
 import tempfile
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 SCHEMA_VERSION = 1
 
@@ -49,6 +69,36 @@ _CACHE: Optional["AutotuneCache"] = None
 
 EntryKey = Tuple[str, str, str]                  # (op, dtype, backend)
 Bucket = Tuple[int, ...]
+Config = Tuple[int, ...]                         # one tunable kernel config
+
+
+@dataclasses.dataclass(frozen=True)
+class Tunable:
+    """A kernel impl's tuning declaration (see module docstring).
+
+    ``attr``  — the ``node.attrs`` key configs are pinned under; one key per
+                kernel family (``'mxu_block'``, ``'attn_block'``, ...), so
+                clearing and pinning never collide across impls.
+    ``space`` — ``space(node, hw) -> [config, ...]``: candidate configs for
+                one node on one ``HardwareSpec``; may be empty (nothing to
+                sweep for this shape).
+    ``bind``  — optional override of the default pin/clear behaviour.
+    """
+
+    attr: str
+    space: Callable[[object, object], Sequence[Config]]
+    bind: Optional[Callable[[object, Optional[Config]], None]] = None
+
+    def tune_space(self, node, hw) -> List[Config]:
+        return [tuple(int(d) for d in cfg) for cfg in self.space(node, hw)]
+
+    def bind_config(self, node, cfg: Optional[Config]) -> None:
+        if self.bind is not None:
+            self.bind(node, cfg)
+        elif cfg is None:
+            node.attrs.pop(self.attr, None)
+        else:
+            node.attrs[self.attr] = tuple(int(d) for d in cfg)
 
 
 def bucket_dim(d: int) -> int:

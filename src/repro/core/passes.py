@@ -216,9 +216,57 @@ def assign_layouts(g: Graph, backend: "object") -> Graph:
 _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4,
                 "int8": 1, "float64": 8}
 
-# nominal FLOPs per element for the memory-bound DFP ops; the election only
-# needs relative magnitudes, not exact instruction counts
-_EW_FLOPS = 5.0
+# FLOPs per element for the memory-bound DFP ops.  The nominal default only
+# needs relative magnitudes; ``benchmarks/perf_iter.py --calibrate-ew``
+# replaces it with the element-weighted mean measured from compiled
+# whole-model HLO (``calibrate_ew_flops`` below), and SOL_EW_FLOPS carries a
+# fitted value into a fresh process.
+_EW_FLOPS_NOMINAL = 5.0
+
+
+def _initial_ew_flops() -> float:
+    import os
+    try:
+        v = float(os.environ.get("SOL_EW_FLOPS", ""))
+    except ValueError:
+        return _EW_FLOPS_NOMINAL
+    return v if v > 0 else _EW_FLOPS_NOMINAL
+
+
+_EW_FLOPS = _initial_ew_flops()
+
+
+def ew_flops() -> float:
+    """The per-element FLOP weight the DFP cost terms currently use."""
+    return _EW_FLOPS
+
+
+def set_ew_flops(value: Optional[float]) -> float:
+    """Override the elementwise FLOP weight (``None`` restores the nominal
+    default).  Non-positive values are rejected back to the default — a
+    degenerate fit must not zero out every DFP node's compute term."""
+    global _EW_FLOPS
+    _EW_FLOPS = (float(value) if value is not None and value > 0
+                 else _EW_FLOPS_NOMINAL)
+    return _EW_FLOPS
+
+
+def fit_ew_flops(samples) -> float:
+    """Least squares through the origin of measured elementwise FLOPs onto
+    elementwise element counts: each sample is ``(ew_flops, ew_elements)``
+    for one whole compiled model (``benchmarks/perf_iter.py`` derives both
+    from the HLO).  Returns the fitted FLOPs-per-element, falling back to
+    the nominal default when the data is degenerate."""
+    num = sum(f * e for f, e in samples if e > 0)
+    den = sum(e * e for _f, e in samples if e > 0)
+    if den <= 0 or num <= 0:
+        return _EW_FLOPS_NOMINAL
+    return num / den
+
+
+def calibrate_ew_flops(samples) -> float:
+    """Fit and install the elementwise FLOP weight in one step."""
+    return set_ew_flops(fit_ew_flops(samples))
 
 
 def _node_cost_terms(n: Node) -> Tuple[float, float, float]:
@@ -273,7 +321,12 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
     cache (``core.autotune``) holds timings for this (op, shape bucket,
     dtype, backend), the candidate with the best *measured* time wins and
     the node is tagged with ``'measured'`` provenance — including any tuned
-    kernel config the measurement carried (``node.attrs['mxu_block']``).
+    kernel config the measurement carried, pinned through the winning
+    impl's ``Tunable`` declaration (``node.attrs['mxu_block']``,
+    ``'attn_block'``, ``'dfp_block'``, ``'rglru_block'``, ...).  Every
+    tunable attr registered for the op (any backend's) is cleared first, so
+    re-electing a graph on a different backend or cache state never leaves
+    a stale pin.
 
     Cold cache falls back to the analytical path: every admissible impl is
     costed with the backend's ``HardwareSpec`` roofline terms — scaled by
@@ -290,6 +343,7 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
     elections: Dict[str, int] = {}
     by_op: Dict[str, Dict[str, int]] = {}
     provenance: Dict[str, Dict[str, int]] = {}
+    pinned: Dict[str, List[Tuple[int, ...]]] = {}
     for n in g.topo():
         if n.op in SOURCE_OPS or n.op is OpKind.OUTPUT:
             continue
@@ -303,18 +357,15 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
             n.op.value, autotune.node_shape(n), n.spec.dtype,
             backend.name).items() if name in by_name}
 
+        cfg = None
         if measured:
             best_name = min(measured,
                             key=lambda nm: (measured[nm].us,
                                             by_name[nm].tier))
             best = by_name[best_name]
-            if measured[best_name].config:
-                n.attrs["mxu_block"] = tuple(measured[best_name].config)
-            else:           # re-election must not leave a stale tuned config
-                n.attrs.pop("mxu_block", None)
+            cfg = measured[best_name].config
             source = "measured"
         else:
-            n.attrs.pop("mxu_block", None)
             cal = cache.calibration(backend.name, n.op.value)
 
             def cost(impl: "R.Impl") -> Tuple[float, int]:
@@ -327,6 +378,16 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
 
             best = min(cands, key=cost)
             source = "calibrated" if cal else "analytical"
+        # re-election must not leave a stale tuned config: clear every
+        # tunable attr registered for this op — not just this backend's
+        # admissible candidates, or a pin would survive re-electing on a
+        # backend where the tuned impl is inadmissible — then pin the
+        # winner's measured config
+        for t in R.tunables_for(n.op):
+            t.bind_config(n, None)
+        if cfg and best.tunable is not None:
+            best.tunable.bind_config(n, tuple(cfg))
+            pinned.setdefault(best.name, []).append(tuple(cfg))
         n.impl = best.name
         elections[best.name] = elections.get(best.name, 0) + 1
         per = by_op.setdefault(n.op.value, {})
@@ -336,6 +397,7 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
     g.elections = elections
     g.elections_by_op = by_op
     g.election_provenance = provenance
+    g.election_pinned = pinned
     return g
 
 

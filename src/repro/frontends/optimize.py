@@ -71,14 +71,21 @@ class SolModel(nn.Module):
         breakdown ``{op value → {impl name → count}}`` showing which flavour
         the election pass chose for each kind of node on this backend.
         With ``provenance=True``: ``{impl name → {"count": n, "sources":
-        {"measured"|"calibrated"|"analytical" → n}}}`` — whether each
-        election came from autotune-cache measurements or the cost model."""
+        {"measured"|"calibrated"|"analytical" → n}, "pinned": [cfg, ...]}}``
+        — whether each election came from autotune-cache measurements or the
+        cost model, plus any tuned kernel configs the measured elections
+        pinned on the nodes (``"pinned"`` only appears when non-empty)."""
         if provenance:
             prov = getattr(self.graph, "election_provenance", {})
-            return {name: {"count": count,
-                           "sources": dict(prov.get(name, {}))}
-                    for name, count in
-                    getattr(self.graph, "elections", {}).items()}
+            pins = getattr(self.graph, "election_pinned", {})
+            out = {}
+            for name, count in getattr(self.graph, "elections", {}).items():
+                entry = {"count": count,
+                         "sources": dict(prov.get(name, {}))}
+                if pins.get(name):
+                    entry["pinned"] = [tuple(c) for c in pins[name]]
+                out[name] = entry
+            return out
         if by_kind:
             return {op: dict(impls) for op, impls in
                     getattr(self.graph, "elections_by_op", {}).items()}

@@ -1,0 +1,7 @@
+"""Shared kernel helpers: the padding/alignment convention lives here once."""
+from __future__ import annotations
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return -(-x // m) * m

@@ -1,20 +1,27 @@
+"""Public wrapper + dispatch-table entry for the Listing-3 AveragePooling.
+
+The impl declares a ``Tunable`` over the channel-block length: a config
+``(bc,)`` pinned as ``node.attrs['avgpool_block']`` makes each kernel
+launch pool ``bc`` channels from one VMEM-resident block."""
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import math
+from typing import List, Sequence, Tuple
 
 import jax
 
 from ...backends import registry
+from ...core.autotune import Tunable
 from ...core.ir import Node, OpKind
 from .kernel import avgpool_call
 
 
-@functools.partial(jax.jit, static_argnames=("kh", "kw", "interpret"))
-def avgpool(x: jax.Array, kh: int = 3, kw: int = 3, *,
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "bc", "interpret"))
+def avgpool(x: jax.Array, kh: int = 3, kw: int = 3, *, bc: int = 1,
             interpret: bool = False) -> jax.Array:
     """Paper Listing-3 AveragePooling (NCHW, stride 1, VALID)."""
-    return avgpool_call(x, kh, kw, interpret=interpret)
+    return avgpool_call(x, kh, kw, bc=bc, interpret=interpret)
 
 
 def _supports(n: Node) -> bool:
@@ -24,13 +31,27 @@ def _supports(n: Node) -> bool:
     return len(n.spec.shape) == 4 and s in (1, (1, 1))
 
 
+def avgpool_tune_space(n: Node, hw) -> List[Tuple[int]]:
+    """Candidate channel blocks: sublane-friendly sizes clamped to divisors
+    of C (gcd) and deduplicated."""
+    if len(n.spec.shape) != 4:
+        return []
+    c = n.spec.shape[1]
+    cands = {math.gcd(v, c) for v in (1, hw.sublanes, 4 * hw.sublanes,
+                                      16 * hw.sublanes, c)}
+    return [(bc,) for bc in sorted(cands)]
+
+
 def _avgpool_impl(n: Node, vals: Sequence[jax.Array],
                   backend: "registry.Backend") -> jax.Array:
     k = n.attrs.get("kernel", 2)
     kh, kw = (k, k) if isinstance(k, int) else k
-    return avgpool(vals[0], kh, kw, interpret=backend.interpret)
+    cfg = n.attrs.get("avgpool_block")
+    bc = int(cfg[0]) if cfg else 1
+    return avgpool(vals[0], kh, kw, bc=bc, interpret=backend.interpret)
 
 
 registry.register_shared_impl(
     OpKind.AVGPOOL, _avgpool_impl, name="pallas.avgpool",
-    requires=("pallas",), supports=_supports)
+    requires=("pallas",), supports=_supports,
+    tunable=Tunable("avgpool_block", avgpool_tune_space))

@@ -29,13 +29,19 @@ _SUBLANE = 8
 _LANE = 128
 
 
+def clamp_block_rows(br: int, rows: int) -> int:
+    """Snap a row-block request to the 8-sublane tile and the (rounded-up)
+    problem size."""
+    br = max(_SUBLANE, (br // _SUBLANE) * _SUBLANE)
+    return min(br, max(_SUBLANE,
+                       ((rows + _SUBLANE - 1) // _SUBLANE) * _SUBLANE))
+
+
 def choose_block_rows(rows: int, d: int, n_regs: int, itemsize: int) -> int:
     """Pick block_rows: multiple of the 8-sublane tile, working set under
     budget.  n_regs live registers of (block_rows, d) each."""
     denom = max(1, n_regs) * max(d, _LANE) * itemsize
-    br = max(1, _VMEM_BUDGET // denom)
-    br = max(_SUBLANE, (br // _SUBLANE) * _SUBLANE)
-    return min(br, max(_SUBLANE, ((rows + _SUBLANE - 1) // _SUBLANE) * _SUBLANE))
+    return clamp_block_rows(max(1, _VMEM_BUDGET // denom), rows)
 
 
 def _apply_program(prog: Program, blocks, vecs):
@@ -110,6 +116,7 @@ def _kernel(prog: Program, full_idx: Tuple[int, ...], vec_idx: Tuple[int, ...],
 
 def dfp_fused_call(prog: Program, operands: Sequence[jax.Array],
                    out_shape: Tuple[int, ...], out_dtype,
+                   block_rows: int = 0,
                    interpret: bool = False) -> jax.Array:
     d = out_shape[-1]
     rows = 1
@@ -122,7 +129,8 @@ def dfp_fused_call(prog: Program, operands: Sequence[jax.Array],
 
     n_regs = len(prog.instrs) + len(full_idx) + 2
     itemsize = jnp.dtype(out_dtype).itemsize
-    br = choose_block_rows(rows, d, n_regs, itemsize)
+    br = (clamp_block_rows(block_rows, rows) if block_rows
+          else choose_block_rows(rows, d, n_regs, itemsize))
     grid = (pl.cdiv(rows, br),)
 
     full_ops = [operands[i].reshape(rows, d) for i in full_idx]

@@ -23,13 +23,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .._util import round_up as _round_up
+
 DEFAULT_BQ = 512
 DEFAULT_BK = 512
 NEG = -1e30
 
 
 def _kernel(bq: int, bk: int, causal: bool, window: int, cap: float,
-            scale: float, q_ref, k_ref, v_ref, o_ref):
+            scale: float, s_len: int, q_ref, k_ref, v_ref, o_ref):
     i = pl.program_id(2)
     s = k_ref.shape[2]
     nk = s // bk
@@ -51,6 +53,8 @@ def _kernel(bq: int, bk: int, causal: bool, window: int, cap: float,
             mask &= q_pos >= k_pos
         if window:
             mask &= (q_pos - k_pos) < window
+        if s_len != s:      # ragged tail: padded key positions contribute 0
+            mask &= k_pos < s_len
         logits = jnp.where(mask, logits, NEG)
         m_new = jnp.maximum(m, logits.max(axis=1))
         p = jnp.exp(logits - m_new[:, None])
@@ -80,29 +84,42 @@ def flash_attention_call(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          cap: float = 0.0, bq: int = DEFAULT_BQ,
                          bk: int = DEFAULT_BK,
                          interpret: bool = False) -> jax.Array:
-    """q: (B, H, S, hd); k, v: (B, KV, S, hd).  Returns (B, H, S, hd)."""
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd).  Returns (B, H, S, hd).
+
+    Ragged sequence lengths are zero-padded up to the block grid and sliced
+    back after the call (like ``kernels/matmul``): padded *key* positions
+    are masked inside the kernel (a zero-padded key would score logit 0,
+    not -inf), while padded *query* rows compute garbage that the final
+    slice drops.
+    """
     b, h, s, hd = q.shape
     kv = k.shape[1]
     group = h // kv
-    bq = min(bq, s)
-    bk = min(bk, s)
-    if s % bq or s % bk:
-        raise ValueError(f"seq {s} must divide blocks ({bq},{bk})")
+    bq = min(bq, _round_up(s, 8))     # keep the 8-sublane alignment for
+    bk = min(bk, _round_up(s, 8))     # short sequences instead of bq = s
+    if max(bq, bk) % min(bq, bk):     # incommensurate pair: collapse to the
+        bq = bk = min(bq, bk)         # smaller instead of an lcm-sized pad
+    step = max(bq, bk)                # padded S must divide both blocks
+    sp = _round_up(s, step)
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
     scale = 1.0 / math.sqrt(hd)
-    grid = (b, h, s // bq)
-    kernel = functools.partial(_kernel, bq, bk, causal, window, cap, scale)
-    return pl.pallas_call(
+    grid = (b, h, sp // bq)
+    kernel = functools.partial(_kernel, bq, bk, causal, window, cap, scale, s)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i: (b_, h_, i, 0)),
-            pl.BlockSpec((1, 1, s, hd),
+            pl.BlockSpec((1, 1, sp, hd),
                          lambda b_, h_, i, g=group: (b_, h_ // g, 0, 0)),
-            pl.BlockSpec((1, 1, s, hd),
+            pl.BlockSpec((1, 1, sp, hd),
                          lambda b_, h_, i, g=group: (b_, h_ // g, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd),
                                lambda b_, h_, i: (b_, h_, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, hd), q.dtype),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :s, :] if sp != s else out

@@ -1,15 +1,22 @@
-"""Public wrapper: accepts model-layout (B, S, H, hd) tensors."""
+"""Public wrapper: accepts model-layout (B, S, H, hd) tensors.
+
+The Pallas impl declares a ``Tunable`` over the (bq, bk) block sizes: the
+autotune sweep measures every candidate pair and the election pass pins the
+winner on the node as ``node.attrs['attn_block']``, which the impl reads
+back at lowering time."""
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ...backends import registry
+from ...core.autotune import Tunable
 from ...core.ir import Node, OpKind
-from .kernel import flash_attention_call
+from .._util import round_up
+from .kernel import DEFAULT_BK, DEFAULT_BQ, flash_attention_call
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
@@ -35,10 +42,40 @@ def _attrs(n: Node) -> dict:
                 cap=n.attrs.get("cap", 0.0))
 
 
+def attn_tune_space(n: Node, hw) -> List[Tuple[int, int]]:
+    """Candidate (bq, bk) block pairs for one ATTENTION node: powers of two
+    from one VPU row block up to the default block, clamped to the (8-sublane
+    rounded) sequence length, deduplicated, and gated on the f32 logits tile
+    plus the q/k/v/accumulator blocks fitting in half of VMEM."""
+    b, s, h, hd = n.spec.shape
+    cap = min(DEFAULT_BQ, round_up(s, 8))
+    cands: List[Tuple[int, int]] = []
+    seen = set()
+    size = 32
+    sizes = []
+    while size <= max(DEFAULT_BQ, DEFAULT_BK):
+        sizes.append(size)
+        size *= 2
+    for bq in sizes:
+        for bk in sizes:
+            cfg = (min(bq, cap), min(bk, cap))
+            # logits/mask (bq, bk) f32 + q/acc (bq, hd) + k/v blocks (bk, hd)
+            working = 4 * (2 * cfg[0] * cfg[1]
+                           + 2 * cfg[0] * hd + 2 * cfg[1] * hd)
+            if cfg in seen or working > hw.vmem_bytes // 2:
+                continue
+            seen.add(cfg)
+            cands.append(cfg)
+    return cands
+
+
 def _attention_pallas_impl(n: Node, vals: Sequence[jax.Array],
                            backend: "registry.Backend") -> jax.Array:
     q, k, v = vals
-    return flash_attention(q, k, v, interpret=backend.interpret, **_attrs(n))
+    cfg = n.attrs.get("attn_block")
+    bq, bk = (int(cfg[0]), int(cfg[1])) if cfg else (DEFAULT_BQ, DEFAULT_BK)
+    return flash_attention(q, k, v, bq=bq, bk=bk,
+                           interpret=backend.interpret, **_attrs(n))
 
 
 def _attention_ref_impl(n: Node, vals: Sequence[jax.Array],
@@ -53,7 +90,8 @@ def _attention_ref_impl(n: Node, vals: Sequence[jax.Array],
 registry.register_shared_impl(
     OpKind.ATTENTION, _attention_pallas_impl, name="pallas.flash_attention",
     requires=("pallas",),
-    supports=lambda n: len(n.spec.shape) == 4)
+    supports=lambda n: len(n.spec.shape) == 4,
+    tunable=Tunable("attn_block", attn_tune_space))
 registry.register_reference_impl(
     OpKind.ATTENTION, _attention_ref_impl, name="ref.attention",
     memory="roundtrip")   # materializes the S×S score matrix

@@ -27,11 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._util import round_up as _round_up
+
 Block = Tuple[int, int, int]          # (bm, bk, bn)
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _clamp(block: Block, m: int, k: int, n: int) -> Block:

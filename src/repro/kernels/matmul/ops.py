@@ -1,7 +1,8 @@
 """Public wrapper + dispatch-table entries for the tiled MXU matmul.
 
 Registered for the 'mxu' capability on LINEAR and MATMUL — the first kernel
-that actually uses the capability ``pallas_tpu`` has always advertised.  The
+that actually uses the capability ``pallas_tpu`` has always advertised.
+Both impls declare a ``Tunable`` over the ``tile_space`` search space: the
 election pass may pin a measured tile config on the node
 (``node.attrs['mxu_block']``, written from the autotune cache); absent that,
 ``default_block`` keys the tile off the backend's ``HardwareSpec.mxu_dim``.
@@ -9,13 +10,14 @@ election pass may pin a measured tile config on the node
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 
 from ...backends import registry
+from ...core.autotune import Tunable, node_shape
 from ...core.ir import Node, OpKind
-from .kernel import Block, default_block, matmul_call
+from .kernel import Block, default_block, matmul_call, tile_space
 
 _FLOAT_DTYPES = ("float32", "bfloat16", "float16")
 
@@ -75,9 +77,19 @@ def _supports_linear(n: Node) -> bool:
             and "out_features" in n.attrs)
 
 
+def _mxu_tune_space(n: Node, hw) -> List[Block]:
+    shp = node_shape(n)                   # (M, K, N), batch folded into M
+    if not shp or len(shp) != 3:
+        return []
+    m, k, nn = shp
+    return tile_space(m, k, nn, hw)
+
+
+_MXU_TUNABLE = Tunable("mxu_block", _mxu_tune_space)
+
 registry.register_shared_impl(
     OpKind.MATMUL, _matmul_impl, name="pallas.matmul_mxu",
-    requires=("mxu",), supports=_supports_matmul)
+    requires=("mxu",), supports=_supports_matmul, tunable=_MXU_TUNABLE)
 registry.register_shared_impl(
     OpKind.LINEAR, _linear_impl, name="pallas.linear_mxu",
-    requires=("mxu",), supports=_supports_linear)
+    requires=("mxu",), supports=_supports_linear, tunable=_MXU_TUNABLE)

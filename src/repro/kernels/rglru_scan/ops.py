@@ -1,13 +1,15 @@
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import math
+from typing import List, Sequence, Tuple
 
 import jax
 
 from ...backends import registry
+from ...core.autotune import Tunable
 from ...core.ir import Node, OpKind
-from .kernel import rglru_scan_call
+from .kernel import DEFAULT_BD, rglru_scan_call
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "interpret"))
@@ -21,10 +23,31 @@ def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
 # -- dispatch-table entries: OpKind.RGLRU_SCAN over (a, b, h0) nodes;
 #    the graph-level op yields the full hidden sequence h.
 
+def _clamp_bd(bd: int, d: int) -> int:
+    """The kernel's channel block must divide D: gcd is the largest value
+    that both divides D and never exceeds the request."""
+    return math.gcd(max(1, int(bd)), d)
+
+
+def rglru_tune_space(n: Node, hw) -> List[Tuple[int]]:
+    """Candidate channel-block lengths for one RGLRU_SCAN node: VPU-lane
+    multiples up to the default block plus the whole/half channel dim, each
+    clamped to a divisor of D and deduplicated."""
+    if len(n.spec.shape) != 3:
+        return []
+    d = n.spec.shape[-1]
+    cands = {_clamp_bd(c, d)
+             for c in (hw.lanes, 2 * hw.lanes, 4 * hw.lanes, DEFAULT_BD,
+                       d, max(1, d // 2))}
+    return [(bd,) for bd in sorted(cands)]
+
+
 def _rglru_pallas_impl(n: Node, vals: Sequence[jax.Array],
                        backend: "registry.Backend") -> jax.Array:
     a, b, h0 = vals
-    return rglru_scan(a, b, h0, interpret=backend.interpret)[0]
+    cfg = n.attrs.get("rglru_block")
+    bd = _clamp_bd(cfg[0], a.shape[-1]) if cfg else DEFAULT_BD
+    return rglru_scan(a, b, h0, bd=bd, interpret=backend.interpret)[0]
 
 
 def _rglru_ref_impl(n: Node, vals: Sequence[jax.Array],
@@ -36,6 +59,7 @@ def _rglru_ref_impl(n: Node, vals: Sequence[jax.Array],
 
 registry.register_shared_impl(
     OpKind.RGLRU_SCAN, _rglru_pallas_impl, name="pallas.rglru_scan",
-    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 3)
+    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 3,
+    tunable=Tunable("rglru_block", rglru_tune_space))
 registry.register_reference_impl(
     OpKind.RGLRU_SCAN, _rglru_ref_impl, name="ref.rglru_scan")

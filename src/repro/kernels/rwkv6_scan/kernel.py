@@ -7,20 +7,32 @@ resident in VMEM (64×64 f32 = 16 KiB), computing
   S_t = diag(w_t) S_{t-1} + k_t vᵀ_t
 
 The matrix state never round-trips to HBM during the scan — the DFP
-insight applied to linear attention.  Grid: (B, H); blocks hold the whole
-(T, hd) head slice in VMEM (4096×64×4 B ≈ 1 MiB per operand).
+insight applied to linear attention.  Grid: (B, H, T/bt) with the time
+dimension innermost: TPU grids iterate the last dimension sequentially, so
+the state carries across time blocks in a VMEM scratch (the same pattern
+as the matmul kernel's K-loop accumulator).  ``bt`` bounds how much of the
+(T, hd) head slice one launch holds in VMEM — the tunable knob the
+autotune sweep measures (clamped to a divisor of T via gcd).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(t_total: int, r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
-            o_ref, sl_ref):
+def _kernel(bt: int, nt: int, r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+            o_ref, sl_ref, s_ref):
+    tq = pl.program_id(2)
+
+    @pl.when(tq == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
     u = u_ref[0, :].astype(jnp.float32)                 # (hd,)
 
     def body(t, s):
@@ -33,35 +45,35 @@ def _kernel(t_total: int, r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         o_ref[0, t, 0, :] = o.astype(o_ref.dtype)
         return jnp.exp(w)[:, None] * s + kv
 
-    s0 = s0_ref[0, 0].astype(jnp.float32)
-    s = jax.lax.fori_loop(0, t_total, body, s0)
-    sl_ref[0, 0] = s.astype(sl_ref.dtype)
+    s_ref[...] = jax.lax.fori_loop(0, bt, body, s_ref[...])
+
+    @pl.when(tq == nt - 1)
+    def _store():
+        sl_ref[0, 0] = s_ref[...].astype(sl_ref.dtype)
 
 
-def rwkv6_scan_call(r, k, v, logw, u, s0, *, interpret: bool = False):
+def rwkv6_scan_call(r, k, v, logw, u, s0, *, bt: int = 0,
+                    interpret: bool = False):
     """r,k,v,logw: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
     Returns (o: (B,T,H,hd), s_last: (B,H,hd,hd))."""
     b, t, h, hd = r.shape
-    grid = (b, h)
-    kernel = functools.partial(_kernel, t)
+    bt = math.gcd(max(1, bt), t) if bt else t
+    nt = t // bt
+    grid = (b, h, nt)
+    kernel = functools.partial(_kernel, bt, nt)
+    seq = pl.BlockSpec((1, bt, 1, hd), lambda i, j, tq: (i, tq, j, 0))
+    state = pl.BlockSpec((1, 1, hd, hd), lambda i, j, tq: (i, j, 0, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, hd), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, 1, hd, hd), lambda i, j: (i, j, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, hd, hd), lambda i, j: (i, j, 0, 0)),
-        ],
+        in_specs=[seq, seq, seq, seq,
+                  pl.BlockSpec((1, hd), lambda i, j, tq: (j, 0)),
+                  state],
+        out_specs=[seq, state],
         out_shape=[
             jax.ShapeDtypeStruct((b, t, h, hd), r.dtype),
             jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
         ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
         interpret=interpret,
     )(r, k, v, logw, u, s0)

@@ -1,28 +1,50 @@
+"""Public wrapper + dispatch-table entries for the RWKV6 WKV recurrence.
+
+The Pallas impl declares a ``Tunable`` over the time-block length: a config
+``(bt,)`` pinned as ``node.attrs['rwkv6_block']`` bounds how many timesteps
+one kernel launch holds in VMEM, the state matrix carrying across blocks in
+scratch."""
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import math
+from typing import List, Sequence, Tuple
 
 import jax
 
 from ...backends import registry
+from ...core.autotune import Tunable
 from ...core.ir import Node, OpKind
 from .kernel import rwkv6_scan_call
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def rwkv6_scan(r, k, v, logw, u, s0, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, s0, *, bt: int = 0,
+               interpret: bool = False):
     """RWKV6 WKV recurrence.  r,k,v,logw: (B,T,H,hd); u: (H,hd);
     s0: (B,H,hd,hd) → (o: (B,T,H,hd), s_last)."""
-    return rwkv6_scan_call(r, k, v, logw, u, s0, interpret=interpret)
+    return rwkv6_scan_call(r, k, v, logw, u, s0, bt=bt, interpret=interpret)
 
 
 # -- dispatch-table entries: OpKind.RWKV6_SCAN over (r, k, v, logw, u, s0);
 #    the graph-level op yields the per-token output o.
 
+def rwkv6_tune_space(n: Node, hw) -> List[Tuple[int]]:
+    """Candidate time-block lengths: sublane multiples up to the whole
+    sequence, clamped to divisors of T (gcd) and deduplicated."""
+    if len(n.spec.shape) != 4:
+        return []
+    t = n.spec.shape[1]
+    cands = {math.gcd(v, t) for v in (hw.sublanes, 4 * hw.sublanes,
+                                      16 * hw.sublanes, t, max(1, t // 2))}
+    return [(bt,) for bt in sorted(cands)]
+
+
 def _rwkv6_pallas_impl(n: Node, vals: Sequence[jax.Array],
                        backend: "registry.Backend") -> jax.Array:
-    return rwkv6_scan(*vals, interpret=backend.interpret)[0]
+    cfg = n.attrs.get("rwkv6_block")
+    bt = int(cfg[0]) if cfg else 0
+    return rwkv6_scan(*vals, bt=bt, interpret=backend.interpret)[0]
 
 
 def _rwkv6_ref_impl(n: Node, vals: Sequence[jax.Array],
@@ -33,6 +55,7 @@ def _rwkv6_ref_impl(n: Node, vals: Sequence[jax.Array],
 
 registry.register_shared_impl(
     OpKind.RWKV6_SCAN, _rwkv6_pallas_impl, name="pallas.rwkv6_scan",
-    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 4)
+    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 4,
+    tunable=Tunable("rwkv6_block", rwkv6_tune_space))
 registry.register_reference_impl(
     OpKind.RWKV6_SCAN, _rwkv6_ref_impl, name="ref.rwkv6_scan")

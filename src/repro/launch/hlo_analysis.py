@@ -229,6 +229,35 @@ def conv_flops(op: Op, types: Dict[str, str]) -> float:
     return 2.0 * out * k
 
 
+# per-element FLOP weights for elementwise HLO opcodes (transcendentals
+# modelled at polynomial-approximation cost); pure data movement (copy,
+# convert, broadcast, ...) and everything unlisted count zero
+_EW_FLOP_WEIGHTS = {
+    "add": 1, "subtract": 1, "multiply": 1, "maximum": 1, "minimum": 1,
+    "abs": 1, "negate": 1, "compare": 1, "select": 1, "and": 1, "or": 1,
+    "xor": 1, "not": 1, "sign": 1, "floor": 1, "ceil": 1, "clamp": 2,
+    "round-nearest-afz": 1, "round-nearest-even": 1,
+    "divide": 4, "remainder": 4, "sqrt": 4, "rsqrt": 4, "cbrt": 8,
+    "exponential": 8, "exponential-minus-one": 8, "log": 8,
+    "log-plus-one": 8, "tanh": 8, "logistic": 8, "sine": 8, "cosine": 8,
+    "atan2": 12, "power": 10, "erf": 10,
+}
+
+
+def elementwise_profile(text: str) -> Tuple[float, float]:
+    """Whole-module elementwise work: ``(ew_flops, ew_elements)`` summed with
+    loop multiplicity, *including* fusion bodies (where XLA puts almost every
+    elementwise op).  The ratio is the element-weighted mean FLOPs per
+    elementwise element — the measured replacement for the DFP cost model's
+    nominal per-element constant (``core.passes.calibrate_ew_flops``).
+
+    ``analyze`` folds the same accounting into its single pass
+    (``ew_flops``/``ew_elements`` in its result) — prefer those fields when
+    you already pay for an ``analyze`` call."""
+    res = analyze(text, 1)
+    return res["ew_flops"], res["ew_elements"]
+
+
 def collective_traffic(op: Op, n_devices: int) -> Tuple[str, float, float]:
     kind = op.opcode.replace("-start", "")
     size = _type_bytes(op.type_str)
@@ -371,6 +400,8 @@ def analyze(text: str, n_devices: int) -> Dict[str, object]:
     flops = 0.0
     traffic = 0.0
     ici = 0.0
+    ew_flops = 0.0
+    ew_elements = 0.0
     coll: Dict[str, Dict[str, float]] = {}
     loops: List[Dict[str, object]] = []
 
@@ -384,6 +415,14 @@ def analyze(text: str, n_devices: int) -> Dict[str, object]:
                 flops += m * dot_flops(op, comp.types)
             elif op.opcode == "convolution":
                 flops += m * conv_flops(op, comp.types)
+            ew_w = _EW_FLOP_WEIGHTS.get(op.opcode)
+            if ew_w is not None:        # counted inside fusion bodies too
+                _, dims = _first_array(op.type_str)
+                n_elem = 1.0
+                for d in dims:
+                    n_elem *= d
+                ew_flops += m * n_elem * ew_w
+                ew_elements += m * n_elem
             if is_fusion:
                 continue
             base = op.opcode.replace("-start", "")
@@ -408,6 +447,8 @@ def analyze(text: str, n_devices: int) -> Dict[str, object]:
         "flops_per_device": flops,
         "hbm_bytes_per_device": traffic,
         "ici_bytes_per_device": ici,
+        "ew_flops": ew_flops,
+        "ew_elements": ew_elements,
         "collectives": coll,
         "loops": loops,
         "n_computations": len(comps),

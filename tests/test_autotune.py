@@ -1,17 +1,22 @@
 """Autotune subsystem tests: cache round-trip + schema/atomicity guarantees,
-shape-bucket canonicalization with nearest-bucket lookup, measured-first
-election (provenance, config pinning, the roofline-contradicting flip), the
-calibration fit, and the MXU matmul as the elected LINEAR/MATMUL flavour."""
+shape-bucket canonicalization with nearest-bucket lookup (plus hypothesis
+property tests over both), measured-first election (provenance, config
+pinning through the Tunable protocol, the roofline-contradicting flip), the
+calibration fits (roofline coefficients and the DFP _EW_FLOPS constant),
+and the MXU matmul as the elected LINEAR/MATMUL flavour."""
 import json
 import os
 
+from _hypo import hypothesis, st  # real hypothesis, or skip-stubs when absent
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.backends import get_backend
+from repro.backends import registry as R
 from repro.core import autotune, ir, passes
-from repro.core.autotune import AutotuneCache, Measurement, bucket_shape
+from repro.core.autotune import (AutotuneCache, Measurement, bucket_dim,
+                                 bucket_shape)
 from repro.core.executor import lower_graph
 from repro.core.ir import Graph, Node, OpKind, TensorSpec
 from repro.frontends import nn
@@ -110,6 +115,190 @@ def test_bucket_canonicalization_and_nearest_lookup():
     assert c.lookup("matmul", (256, 256, 256), "bfloat16", "xla") == {}
     assert c.lookup("matmul", (256, 256, 256), "float32", "host_cpu") == {}
     assert c.lookup("linear", (256, 256, 256), "float32", "xla") == {}
+
+
+# -- hypothesis property tests ---------------------------------------------------
+
+@hypothesis.settings(max_examples=100, deadline=None)
+@hypothesis.given(a=st.integers(1, 1 << 20), b=st.integers(1, 1 << 20))
+def test_bucket_dim_monotone_pow2(a, b):
+    """bucket_dim is monotone, always a power of two, within a ×√2 factor
+    of its argument, and bucket_shape applies it elementwise."""
+    lo, hi = sorted((a, b))
+    assert bucket_dim(lo) <= bucket_dim(hi)
+    for d in (a, b):
+        bd = bucket_dim(d)
+        assert bd >= 1 and (bd & (bd - 1)) == 0
+        assert bd / d <= 2 ** 0.5 + 1e-9 and d / bd <= 2 ** 0.5 + 1e-9
+    assert bucket_shape((a, b)) == (bucket_dim(a), bucket_dim(b))
+
+
+@hypothesis.settings(max_examples=50, deadline=None)
+@hypothesis.given(
+    shape=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    probe=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    us=st.floats(1e-3, 1e6, allow_nan=False, allow_infinity=False))
+def test_lookup_never_crosses_ops_dtypes_backends(shape, probe, us):
+    """Nearest-bucket lookup may roam across same-rank buckets but never
+    across op kinds, dtypes, backends, or ranks."""
+    c = AutotuneCache()
+    c.record("matmul", tuple(shape), "float32", "xla", "ref.matmul", us)
+    assert c.lookup("linear", tuple(probe), "float32", "xla") == {}
+    assert c.lookup("matmul", tuple(probe), "bfloat16", "xla") == {}
+    assert c.lookup("matmul", tuple(probe), "float32", "host_cpu") == {}
+    got = c.lookup("matmul", tuple(probe), "float32", "xla")
+    if len(probe) == len(shape):
+        assert got["ref.matmul"].us == us     # the only same-rank bucket
+    else:
+        assert got == {}
+
+
+_ENTRY = st.tuples(
+    st.sampled_from(["matmul", "linear", "attention", "fused"]),
+    st.lists(st.integers(1, 2048), min_size=1, max_size=4),
+    st.sampled_from(["float32", "bfloat16"]),
+    st.sampled_from(["xla", "host_cpu", "pallas_interpret"]),
+    st.sampled_from(["ref.x", "pallas.y", "host_cpu.z"]),
+    st.floats(1e-3, 1e6, allow_nan=False, allow_infinity=False),
+    st.one_of(st.none(), st.lists(st.integers(1, 512), min_size=1,
+                                  max_size=3)))
+
+
+@hypothesis.settings(max_examples=25, deadline=None,
+                     suppress_health_check=[
+                         hypothesis.HealthCheck.function_scoped_fixture])
+@hypothesis.given(entries=st.lists(_ENTRY, max_size=12))
+def test_cache_save_load_roundtrip_idempotent(tmp_path, entries):
+    """save → load reproduces the cache exactly, and a second save → load
+    of the loaded cache is a fixed point (idempotence)."""
+    c = AutotuneCache()
+    for op, shape, dtype, backend, impl, us, cfg in entries:
+        c.record(op, tuple(shape), dtype, backend, impl, us,
+                 config=tuple(cfg) if cfg else None,
+                 flops=us * 2, nbytes=us * 3)
+    p1 = str(tmp_path / "c1.json")
+    c.save(p1)
+    c2 = AutotuneCache.load(p1)
+    assert c2.to_json() == c.to_json()
+    assert len(c2) == len(c)
+    p2 = str(tmp_path / "c2.json")
+    c2.save(p2)
+    assert AutotuneCache.load(p2).to_json() == c2.to_json()
+
+
+# -- the Tunable protocol --------------------------------------------------------
+
+def _attention_graph(b=1, s=64, h=2, hd=16):
+    q, k, v = (ir.input_node((b, s, h, hd), name=nm) for nm in "qkv")
+    node = Node(OpKind.ATTENTION, [q, k, v], TensorSpec((b, s, h, hd)),
+                attrs={"causal": True})
+    return Graph([q, k, v], [node], {}), node
+
+
+def test_registry_declares_tunables_for_kernel_families():
+    """ISSUE tentpole: every Pallas kernel family — matmul, flash
+    attention, dfp_fused, both recurrence scans and the Listing-3 avgpool —
+    exposes a tune space through the registry, and bind_config pins/clears
+    the declared node attr."""
+    from benchmarks.autotune import _node
+    R._load_entry_points()
+    hw = get_backend("pallas_interpret").hw
+    _g, attn = _attention_graph()
+    _g2, lin = _linear_graph(8, 256, 128)
+    for impl_name, node in (
+            ("pallas.matmul_mxu", _node("matmul", (256, 256, 256))),
+            ("pallas.linear_mxu", lin),
+            ("pallas.flash_attention", attn),
+            ("pallas.dfp_fused", _node("fused", (256, 128))),
+            ("pallas.rglru_scan", _node("rglru_scan", (2, 32, 256))),
+            ("pallas.rwkv6_scan", _node("rwkv6_scan", (1, 64, 2, 16))),
+            ("pallas.avgpool", _node("avgpool", (1, 8, 14, 14)))):
+        impl = R.get_impl(impl_name)
+        assert impl is not None and impl.tunable is not None, impl_name
+        space = impl.tunable.tune_space(node, hw)
+        assert len(space) >= 2, (impl_name, space)
+        impl.tunable.bind_config(node, space[0])
+        assert tuple(node.attrs[impl.tunable.attr]) == tuple(space[0])
+        impl.tunable.bind_config(node, None)
+        assert impl.tunable.attr not in node.attrs
+
+
+def test_measured_attention_election_pins_and_clears_block():
+    """A measured attention win pins its (bq, bk) config under the generic
+    Tunable attr; a cold re-election clears it."""
+    c = AutotuneCache()
+    c.record("attention", (1, 64, 2, 16), "float32", "pallas_interpret",
+             "pallas.flash_attention", 3.0, config=(32, 64))
+    c.record("attention", (1, 64, 2, 16), "float32", "pallas_interpret",
+             "ref.attention", 9.0)
+    autotune.set_cache(c)
+    g, node = _attention_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert node.impl == "pallas.flash_attention"
+    assert node.attrs["attn_block"] == (32, 64)
+    assert g.election_pinned["pallas.flash_attention"] == [(32, 64)]
+
+    autotune.set_cache(AutotuneCache())
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert "attn_block" not in node.attrs
+
+
+def test_reelection_on_foreign_backend_clears_pin():
+    """Re-electing on a backend where the tuned impl is inadmissible (no
+    'pallas' capability on host_cpu) must still drop the stale pin."""
+    c = AutotuneCache()
+    c.record("attention", (1, 64, 2, 16), "float32", "pallas_interpret",
+             "pallas.flash_attention", 3.0, config=(32, 64))
+    autotune.set_cache(c)
+    g, node = _attention_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert node.attrs["attn_block"] == (32, 64)
+
+    passes.elect_implementations(g, get_backend("host_cpu"))
+    assert node.impl == "ref.attention"
+    assert "attn_block" not in node.attrs
+
+
+def test_measured_attention_entry_flips_election():
+    """ISSUE acceptance: a cached attention measurement flips the flavour
+    choice — ref.attention wins only because the data says so."""
+    g_cold, node_cold = _attention_graph()
+    passes.elect_implementations(g_cold, get_backend("pallas_interpret"))
+    assert node_cold.impl == "pallas.flash_attention"   # the roofline choice
+
+    c = AutotuneCache()
+    c.record("attention", (1, 64, 2, 16), "float32", "pallas_interpret",
+             "pallas.flash_attention", 50.0, config=(64, 64))
+    c.record("attention", (1, 64, 2, 16), "float32", "pallas_interpret",
+             "ref.attention", 2.0)
+    autotune.set_cache(c)
+    g, node = _attention_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert node.impl == "ref.attention"
+    assert g.election_provenance["ref.attention"] == {"measured": 1}
+    assert "attn_block" not in node.attrs   # the loser's config is not pinned
+
+
+def test_pinned_attention_block_executes_and_matches_reference():
+    """End to end: elect with a warm cache, lower, execute — the pinned
+    block size reaches the kernel and the output still matches the oracle."""
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    c = AutotuneCache()
+    c.record("attention", (1, 64, 2, 16), "float32", "pallas_interpret",
+             "pallas.flash_attention", 3.0, config=(32, 32))
+    autotune.set_cache(c)
+    g, node = _attention_graph()
+    passes.elect_implementations(g, get_backend("pallas_interpret"))
+    assert node.attrs["attn_block"] == (32, 32)
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+               for _ in range(3))
+    y = lower_graph(g, get_backend("pallas_interpret"))({}, q, k, v)
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 # -- measured election ----------------------------------------------------------
@@ -267,10 +456,9 @@ def test_calibrated_cost_model_drives_cold_election():
 # -- the autotune driver (tiny, through the dispatch table) ----------------------
 
 def test_driver_measures_every_admissible_impl(tmp_path):
-    """benchmarks.autotune times each dispatch-table candidate, persists the
-    cache, and a reloaded cache elects from the measurements."""
-    from benchmarks.autotune import tune, verify_cache
-    path = str(tmp_path / "cache.json")
+    """benchmarks.autotune times each dispatch-table candidate and records
+    tuned configs plus calibration terms."""
+    from benchmarks.autotune import tune
     cache = AutotuneCache()
     rows = tune("pallas_interpret", ("linear",), tiny=True,
                 warmup=0, iters=1, cache=cache)
@@ -280,5 +468,59 @@ def test_driver_measures_every_admissible_impl(tmp_path):
     got = cache.lookup("linear", (8, 64, 32), "float32", "pallas_interpret")
     assert got["pallas.linear_mxu"].config is not None   # tuned tile config
     assert got["pallas.linear_mxu"].flops > 0            # calibration terms
+
+
+def test_driver_sweeps_registry_declared_tunables():
+    """ISSUE acceptance: the sweep iterates whatever Tunable spaces the
+    registry declares — attention blocks, DFP fusion sizing and the scan
+    block all come back with a winning config, not just the matmul."""
+    from benchmarks.autotune import tune
+    cache = AutotuneCache()
+    tune("pallas_interpret", ("attention", "fused", "rglru_scan"),
+         tiny=True, warmup=0, iters=1, cache=cache)
+    att = cache.lookup("attention", (1, 64, 2, 16), "float32",
+                       "pallas_interpret")
+    assert att["pallas.flash_attention"].config is not None
+    fus = cache.lookup("fused", (64, 32), "float32", "pallas_interpret")
+    assert fus["pallas.dfp_fused"].config is not None
+    scan = cache.lookup("rglru_scan", (1, 16, 32), "float32",
+                        "pallas_interpret")
+    assert scan["pallas.rglru_scan"].config is not None
+
+
+def test_verify_cache_roundtrip_with_attention_flip(tmp_path):
+    """benchmarks.autotune --verify end to end: a tuned cache written to
+    disk yields measured elections on reload, and the attention flip proof
+    (cached block-size measurement flips the election, impl_report shows
+    the pinned config) passes."""
+    from benchmarks.autotune import tune, verify_cache
+    path = str(tmp_path / "cache.json")
+    cache = AutotuneCache()
+    for ops in (("linear",), ("attention",)):
+        tune("pallas_interpret", ops, tiny=True, warmup=0, iters=1,
+             cache=cache)
     cache.save(path)
     assert verify_cache(path) == 0
+
+
+# -- _EW_FLOPS calibration (perf_iter whole-model numbers) -----------------------
+
+def test_ew_flops_fit_recovery():
+    """ISSUE satellite: synthetic whole-model elementwise profiles generated
+    from a known per-element cost are recovered by the fit, installing the
+    fit changes the DFP cost terms, and degenerate data falls back to the
+    nominal default."""
+    k_true = 7.25
+    samples = [(k_true * e, e) for e in (1e6, 4e6, 9e6)]
+    assert passes.fit_ew_flops(samples) == pytest.approx(k_true)
+    try:
+        passes.calibrate_ew_flops(samples)
+        assert passes.ew_flops() == pytest.approx(k_true)
+        n = Node(OpKind.RELU, [ir.input_node((4, 8))], TensorSpec((4, 8)))
+        flops, _streamed, _roundtrip = passes._node_cost_terms(n)
+        assert flops == pytest.approx(k_true * 32)
+    finally:
+        passes.set_ew_flops(None)
+    assert passes.ew_flops() == 5.0
+    assert passes.fit_ew_flops([]) == 5.0
+    assert passes.fit_ew_flops([(0.0, 0.0)]) == 5.0

@@ -62,6 +62,49 @@ def test_flash_attention_variants(window, cap, causal):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("s,bq,bk,causal,window,cap", [
+    (97, 512, 512, True, 0, 0.0),    # prime length, default-sized blocks
+    (97, 32, 64, False, 0, 0.0),     # prime length, explicit uneven blocks
+    (100, 64, 32, True, 32, 20.0),   # ragged + sliding window + softcap
+])
+def test_flash_attention_ragged_sequence(s, bq, bk, causal, window, cap):
+    """ISSUE satellite regression: flash_attention_call used to hard-error
+    on sequence lengths the blocks don't divide ('seq s must divide
+    blocks'); ragged tails are now zero-padded and sliced like
+    kernels/matmul, with padded key positions masked in-kernel."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, 4, 16))
+    k = jax.random.normal(ks[1], (2, s, 2, 16))
+    v = jax.random.normal(ks[2], (2, s, 2, 16))
+    o = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                        bq=bq, bk=bk, interpret=True)
+    r = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        cap=cap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dfp_fused_split_program_matches_unsplit():
+    """Fusion-group splitting is a pure perf knob: every legal max_group
+    produces the same numerics as the single-launch program."""
+    from benchmarks.autotune import _build
+    from repro.kernels.dfp_fused.ops import dfp_fused, dfp_fused_segmented
+    from repro.kernels.dfp_fused.program import encode_program, split_program
+    node, vals = _build("fused", (64, 32))
+    env = {id(i): v for i, v in zip(node.inputs, vals)}
+    prog, operands = encode_program(node, env)
+    ref = np.asarray(dfp_fused(prog, operands, interpret=True))
+    for max_group in range(1, len(prog.instrs) + 1):
+        segs = split_program(prog, max_group)
+        # a pure chain has every split point, so the cap is always honoured
+        assert all(len(p.instrs) <= max_group for p, _sel in segs)
+        out = dfp_fused_segmented(prog, operands, max_group, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), ref,
+                                   rtol=1e-6, atol=1e-6)
+
+
 def test_flash_attention_matches_model_chunked_path():
     """Triangle check: Pallas kernel == model's jnp online-softmax scan."""
     from repro.models import layers as L
