@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import argparse
 import sys
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -145,12 +145,6 @@ def _build(op: str, shape: Tuple[int, ...]):
     raise KeyError(f"unknown autotune op {op!r}")
 
 
-def _time_impl(impl, node, vals: Sequence[jax.Array], backend,
-               warmup: int, iters: int) -> float:
-    fn = jax.jit(lambda *a: impl.fn(node, list(a), backend))
-    return _time(lambda: fn(*vals), warmup=warmup, iters=iters)
-
-
 def tune(backend_name: str = "pallas_interpret",
          ops: Sequence[str] = DEFAULT_OPS, *,
          tiny: bool = False, warmup: int = 2, iters: int = 5,
@@ -158,11 +152,14 @@ def tune(backend_name: str = "pallas_interpret",
     """Measure every admissible impl of each (op, shape) through the dispatch
     table — sweeping each impl's declared ``Tunable`` config space — and
     record best times (plus winning configs) into ``cache``.  Returns
-    benchmark rows for the CSV/JSON harness."""
+    benchmark rows for the CSV/JSON harness.
+
+    The per-node sweep itself lives in ``repro.core.measure.sweep_node`` and
+    is shared with the serving warmup (``SolServer.warm_autotune``), so the
+    two measurement paths cannot drift."""
     from repro.backends import get_backend
-    from repro.backends import registry as R
     from repro.core import autotune as AT
-    from repro.core.passes import _node_cost_terms
+    from repro.core.measure import sweep_node
 
     backend = get_backend(backend_name)
     cache = cache if cache is not None else AT.get_cache()
@@ -171,33 +168,14 @@ def tune(backend_name: str = "pallas_interpret",
     for op in ops:
         for shape in shapes[op]:
             node, vals = _build(op, shape)
-            flops, streamed, roundtrip = _node_cost_terms(node)
-            for impl in R.candidates(backend, node):
-                tun = impl.tunable
-                configs: List[Optional[Tuple[int, ...]]] = [None]
-                if tun is not None:
-                    space = tun.tune_space(node, backend.hw)
-                    if space:
-                        configs = list(space)
-                best_us, best_cfg = float("inf"), None
-                for cfg in configs:
-                    if tun is not None:
-                        tun.bind_config(node, cfg)
-                    us = _time_impl(impl, node, vals, backend, warmup, iters)
-                    if us < best_us:
-                        best_us, best_cfg = us, cfg
-                if tun is not None:
-                    tun.bind_config(node, None)
-                nbytes = roundtrip if impl.memory == "roundtrip" else streamed
-                cache.record(op, AT.node_shape(node), node.spec.dtype,
-                             backend_name, impl.name, best_us,
-                             config=best_cfg, flops=flops, nbytes=nbytes)
-                tag = "x".join(str(d) for d in shape)
-                derived = f"configs={len(configs)}"
-                if best_cfg is not None:
-                    derived += ";best=" + "x".join(str(d) for d in best_cfg)
+            tag = "x".join(str(d) for d in shape)
+            for m in sweep_node(node, vals, backend, cache,
+                                warmup=warmup, iters=iters):
+                derived = f"configs={m.n_configs}"
+                if m.config is not None:
+                    derived += ";best=" + "x".join(str(d) for d in m.config)
                 rows.append((f"autotune_{backend_name}_{op}_{tag}_"
-                             f"{impl.name}", best_us, derived))
+                             f"{m.impl}", m.us, derived))
     return rows
 
 

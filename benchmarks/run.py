@@ -10,15 +10,17 @@ tables).  Prints ``name,us_per_call,derived`` CSV.
   autotune    measured per-impl timings feeding the cache — a tiny sweep of
               every Tunable kernel family the registry declares (matmul
               tiles, attention blocks, DFP fusion sizing, scan blocks)
-  serving     beyond-paper decode throughput smoke
+  serving     continuous batching through the SOL server (tokens/s +
+              p50/p99 request latency + TTFT, measured elections only)
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...] [--json PATH]
 
 ``--json PATH`` additionally writes the rows as a JSON document (the
 ``BENCH_*.json`` series CI uploads as an artifact, so the perf trajectory
-accumulates across commits).  When the ``matmul`` table ran, a sibling
-``BENCH_matmul.json`` is emitted with just those rows, so the matmul perf
-trajectory has its own stable-named data points.
+accumulates across commits).  When the ``matmul`` / ``serving`` tables ran,
+stable-named siblings ``BENCH_matmul.json`` / ``BENCH_serve.json`` are
+emitted with just those rows, so each perf trajectory has its own
+data points.
 
 Exits non-zero if any requested table raises, so CI can gate on the smoke
 step instead of silently shipping a partial CSV.
@@ -55,7 +57,7 @@ def _table_rows(name: str):
         return autotune.csv_rows()
     if name == "serving":
         from . import serving
-        return serving.decode_bench()
+        return serving.csv_rows()
     raise KeyError(f"unknown table {name!r}")
 
 
@@ -96,14 +98,18 @@ def main() -> int:
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"[benchmarks] wrote {json_path}", file=sys.stderr)
-        if per_table.get("matmul"):
-            side = os.path.join(os.path.dirname(json_path) or ".",
-                                "BENCH_matmul.json")
+        # stable-named side files so each table's perf trajectory has its
+        # own data points across commits
+        for table, fname in (("matmul", "BENCH_matmul.json"),
+                             ("serving", "BENCH_serve.json")):
+            if not per_table.get(table):
+                continue
+            side = os.path.join(os.path.dirname(json_path) or ".", fname)
             with open(side, "w") as f:
-                json.dump({"tables": ["matmul"],
+                json.dump({"tables": [table],
                            "rows": [{"name": n, "us_per_call": us,
                                      "derived": d}
-                                    for n, us, d in per_table["matmul"]]},
+                                    for n, us, d in per_table[table]]},
                           f, indent=2)
             print(f"[benchmarks] wrote {side}", file=sys.stderr)
     if failed:

@@ -1,5 +1,28 @@
-"""Serving micro-benchmarks (beyond-paper table): smoke-size prefill/decode
-throughput per architecture family on the host CPU."""
+"""Serving benchmark table: continuous batching THROUGH the SOL pipeline.
+
+Earlier revisions of this table timed ``models/backbone.py`` decode steps —
+a path that bypassed elections, pinned autotune configs and packed staging
+entirely.  Now the table drives ``repro.launch.serve.SolServer``: the
+workload is admitted into the KV-slot arena, padded to the autotune pow2
+buckets, staged with one packed DMA per step and served by bucket models
+whose every LINEAR/MATMUL/ATTENTION election is measured (the run warms
+the autotune cache first and serves with ``strict_provenance``).
+
+Rows (``name,us_per_call,derived``):
+
+  serve_<backend>_step          mean wall time per scheduler step
+  serve_<backend>_latency_p50   request latency percentile (us)
+  serve_<backend>_latency_p99
+  serve_<backend>_ttft_p50      time-to-first-token percentile (us)
+  decode_<arch>_smoke           per-architecture backbone decode step
+                                (qwen2 / rwkv6 / recurrentgemma) — kept so
+                                the sequence-model scan kernels retain a
+                                serving-side perf trajectory
+
+The derived column carries tokens/s, DMA count and the bucket histogram —
+``benchmarks/run.py --json`` additionally snapshots these rows into
+``BENCH_serve.json`` so the serving perf trajectory accumulates in CI.
+"""
 from __future__ import annotations
 
 import time
@@ -9,8 +32,47 @@ import jax
 import jax.numpy as jnp
 
 
+def serve_rows(backend: str = "xla", *, requests: int = 6,
+               gen: int = 6) -> List[Tuple[str, float, str]]:
+    from repro.core import autotune as AT
+    from repro.launch.serve import ServeConfig, SolServer, _smoke_workload
+
+    cfg = ServeConfig(d_model=32, n_heads=2, n_layers=1, vocab=64,
+                      max_seq=32, max_batch=4, slots=4, backend=backend)
+    prev = AT.get_cache()
+    AT.set_cache(AT.AutotuneCache())      # private cache: measure, don't leak
+    try:
+        server = SolServer(cfg, strict_provenance=True)
+        for prompt, g in _smoke_workload(cfg, requests, gen):
+            server.submit(prompt, g)
+        server.warm_autotune(warmup=1, iters=3)
+        s = server.run()
+        server.close()
+    finally:
+        AT.set_cache(prev)
+
+    wall_us = (s["tokens"] / s["tokens_per_s"] * 1e6
+               if s["tokens_per_s"] else 0.0)
+    step_us = wall_us / max(s["steps"], 1)
+    buckets = "/".join(f"{k}:{v}" for k, v in sorted(s["buckets"].items()))
+    return [
+        (f"serve_{backend}_step", step_us,
+         f"{s['tokens_per_s']:.1f}tok/s;dmas={s['dmas']};"
+         f"buckets={buckets}"),
+        (f"serve_{backend}_latency_p50", s["latency_ms"]["p50"] * 1e3,
+         f"{s['requests']}req"),
+        (f"serve_{backend}_latency_p99", s["latency_ms"]["p99"] * 1e3, ""),
+        (f"serve_{backend}_ttft_p50", s["ttft_ms"]["p50"] * 1e3,
+         f"prefills={s['prefills']};decodes={s['decodes']}"),
+    ]
+
+
 def decode_bench(archs=("qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b"),
-                 batch: int = 2, steps: int = 8) -> List[Tuple[str, float, str]]:
+                 batch: int = 2, steps: int = 8
+                 ) -> List[Tuple[str, float, str]]:
+    """Per-architecture backbone decode-step timings (smoke configs) —
+    keeps the reproduced sequence models (attention / RWKV6 / RG-LRU
+    caches) on the serving perf trajectory next to the SolServer table."""
     from repro.configs import get_smoke
     from repro.models import backbone as B
     rows = []
@@ -32,3 +94,7 @@ def decode_bench(archs=("qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b"),
         rows.append((f"decode_{arch}_smoke", us,
                      f"{batch * 1e6 / us:.0f}tok/s"))
     return rows
+
+
+def csv_rows() -> List[Tuple[str, float, str]]:
+    return serve_rows("xla") + decode_bench()

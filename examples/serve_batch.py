@@ -1,66 +1,65 @@
-"""Serve a small model with batched requests: continuous-batching-style
-decode loop over a KV cache, with packed host→device staging of the
-request batch (the paper's packed-memcopy mechanism in use).
+"""Serve batched requests THROUGH the SOL pipeline: continuous batching on
+the elected/tuned graph.
 
-    PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-1.6b]
+Requests are admitted into an AsyncQueue-backed KV-slot arena, padded to
+the same pow2 buckets the autotune cache keys on (so served shapes hit
+measured timings and pinned Tunable configs), staged host→device with one
+packed DMA per step, and decoded by SolModels whose LINEAR/MATMUL/ATTENTION
+elections all carry measured provenance.  The second leg replays the same
+workload from framework-free deploy artifacts (paper Sec. III-C).
+
+    PYTHONPATH=src python examples/serve_batch.py [--backend pallas_interpret]
 """
 import argparse
 import sys
-import time
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_smoke
-from repro.models import backbone as B
-from repro.runtime.packed import transfer
+from repro.core import autotune as AT
+from repro.launch.serve import ServeConfig, SolServer, _smoke_workload
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="rwkv6-1.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--gen", type=int, default=8)
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch)
-    params = B.init_params(cfg, jax.random.PRNGKey(0))
-    max_seq = args.prompt_len + args.gen
+    cfg = ServeConfig(d_model=64, n_heads=4, n_layers=2, vocab=128,
+                      max_seq=64, max_batch=4, slots=6,
+                      backend=args.backend)
+    AT.set_cache(AT.AutotuneCache())          # private, in-memory cache
+    server = SolServer(cfg, strict_provenance=True)
+    workload = _smoke_workload(cfg, args.requests, args.gen)
+    for prompt, gen in workload:
+        server.submit(prompt, gen)
 
-    # batched requests arrive as many small host arrays → ONE packed DMA
-    host_prompts = [np.random.randint(0, cfg.vocab, (args.prompt_len,),
-                                      np.int32) for _ in range(args.batch)]
-    staged = transfer(host_prompts)
-    prompts = jnp.stack(staged)
-    print(f"staged {args.batch} requests via packed transfer")
+    counts = server.warm_autotune()
+    print(f"warmed autotune cache: {counts['impls']} impl timings over "
+          f"{counts['nodes']} (op, shape) keys")
+    summary = server.run()
+    print(f"{summary['requests']} requests → {summary['tokens']} tokens in "
+          f"{summary['steps']} steps ({summary['tokens_per_s']:.1f} tok/s, "
+          f"{summary['dmas']} packed DMAs)")
+    print(f"latency p50/p99 {summary['latency_ms']['p50']:.0f}/"
+          f"{summary['latency_ms']['p99']:.0f} ms, "
+          f"ttft p50 {summary['ttft_ms']['p50']:.0f} ms, "
+          f"buckets {summary['buckets']}")
+    for bucket, rec in sorted(server.served_elections.items()):
+        kinds = {k: list(v) for k, v in rec["by_op"].items()}
+        print(f"  bucket {bucket}: {kinds}")
 
-    decode = jax.jit(
-        lambda p, c, t, pos: B.decode_step(cfg, p, c, t, pos),
-        donate_argnums=(1,))
-
-    cache = B.init_cache(cfg, args.batch, max_seq)
-    logits = None
-    t0 = time.perf_counter()
-    for t in range(args.prompt_len):
-        logits, cache = decode(params, cache, prompts[:, t:t + 1],
-                               jnp.asarray(t))
-    toks = jnp.argmax(logits[:, -1], -1)[:, None]
-    outs = [toks]
-    for t in range(args.prompt_len, max_seq - 1):
-        logits, cache = decode(params, cache, toks, jnp.asarray(t))
-        toks = jnp.argmax(logits[:, -1], -1)[:, None]
-        outs.append(toks)
-    jax.block_until_ready(toks)
-    dt = time.perf_counter() - t0
-    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
-    total = args.batch * (max_seq - 1)
-    print(f"{cfg.name}: {total} tokens in {dt:.2f}s "
-          f"({total / dt:.0f} tok/s on host CPU)")
-    for i in range(min(2, args.batch)):
-        print(f"  req {i}: …{gen[i, :10].tolist()}")
+    # deployment loop: export every bucket model, serve from the artifacts
+    arts = server.export_artifacts()
+    replay = SolServer(cfg, deployed=arts, strict_provenance=True)
+    reqs = [replay.submit(p, g) for p, g in workload]
+    replay.run()
+    live = {r.rid: r.generated for r in server._finished}
+    same = all(r.generated == live[r.rid] for r in reqs)
+    print(f"deploy round-trip over {len(arts)} artifacts: "
+          f"{'bit-identical' if same else 'DIVERGED'}")
+    server.close()
+    replay.close()
 
 
 if __name__ == "__main__":

@@ -112,6 +112,25 @@ def bucket_shape(shape: Tuple[int, ...]) -> Bucket:
     return tuple(bucket_dim(int(d)) for d in shape)
 
 
+def ceil_pow2(d: int) -> int:
+    """Smallest power of two ≥ ``d`` — the SERVING bucket.
+
+    ``bucket_dim`` rounds to the *nearest* pow2 (fine for cache keying,
+    where a measurement covers a neighbourhood), but a server must pad a
+    request UP, never truncate it; and because a power of two is its own
+    bucket (``bucket_dim(ceil_pow2(d)) == ceil_pow2(d)``), a batch padded
+    with ``ceil_pow2`` hits the measured-timing cache and any pinned
+    ``Tunable`` configs exactly instead of falling back to the roofline."""
+    if d <= 1:
+        return 1
+    return 2 ** math.ceil(math.log2(d))
+
+
+def pad_shape(shape: Sequence[int]) -> Tuple[int, ...]:
+    """Per-dim ``ceil_pow2`` — the shape a served batch is padded to."""
+    return tuple(ceil_pow2(int(d)) for d in shape)
+
+
 def node_shape(node) -> Optional[Tuple[int, ...]]:
     """The shape a node is keyed under.  LINEAR/MATMUL → (M, K, N) with
     leading batch dims folded into M; everything else → the output shape."""
@@ -202,6 +221,14 @@ class AutotuneCache:
                        for x, y in zip(b, want))
 
         return dict(buckets[min(same_rank, key=dist)])
+
+    def has_bucket(self, op: str, shape: Tuple[int, ...], dtype: str,
+                   backend: str) -> bool:
+        """Whether the EXACT bucket of ``shape`` holds measurements (no
+        nearest-bucket fallback) — the serving warmup uses this to skip
+        shapes an earlier run already measured."""
+        buckets = self._entries.get((op, dtype, backend))
+        return bool(buckets) and bucket_shape(shape) in buckets
 
     def entries(self) -> List[Tuple[EntryKey, Bucket, str, Measurement]]:
         """Flat iteration for the calibration fit and reporting."""

@@ -1,0 +1,78 @@
+"""Shared impl-sweep measurement (one implementation, two callers).
+
+``sweep_node`` times every admissible impl of ONE node through the dispatch
+table — sweeping each impl's declared :class:`~repro.core.autotune.Tunable`
+config space, restoring the node's attrs afterwards — and records the best
+time (plus the winning config and the impl's roofline terms) into an
+:class:`~repro.core.autotune.AutotuneCache`.
+
+Both measurement paths go through here so they can never drift: the
+offline driver ``benchmarks/autotune.py`` sweeps synthetic (op, shape)
+problems, and ``launch/serve.SolServer.warm_autotune`` sweeps the actual
+nodes of the graphs it is about to serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplMeasurement:
+    impl: str                              # impl name, as cache-recorded
+    us: float                              # best measured time
+    config: Optional[Tuple[int, ...]]      # winning tunable config (or None)
+    n_configs: int                         # size of the swept config space
+
+
+def time_call(fn: Callable[[], object], warmup: int = 2,
+              iters: int = 5) -> float:
+    """Mean wall time of ``fn`` in µs after warmup (same convention as
+    ``benchmarks/paper_tables._time``)."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(max(iters, 1)):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / max(iters, 1) * 1e6
+
+
+def sweep_node(node, vals: Sequence[object], backend, cache, *,
+               warmup: int = 2, iters: int = 5) -> List[ImplMeasurement]:
+    """Measure every admissible impl of ``node`` on ``backend`` using the
+    concrete operand arrays ``vals`` (in ``node.inputs`` order) and record
+    each impl's best time into ``cache`` keyed on the node's autotune
+    bucket.  Returns the per-impl results for reporting."""
+    from ..backends import registry as R
+    from . import autotune as AT
+    from .passes import _node_cost_terms
+
+    flops, streamed, roundtrip = _node_cost_terms(node)
+    out: List[ImplMeasurement] = []
+    for impl in R.candidates(backend, node):
+        tun = impl.tunable
+        configs: List[Optional[Tuple[int, ...]]] = [None]
+        if tun is not None:
+            space = tun.tune_space(node, backend.hw)
+            if space:
+                configs = list(space)
+        best_us, best_cfg = float("inf"), None
+        for cfg in configs:
+            if tun is not None:
+                tun.bind_config(node, cfg)
+            fn = jax.jit(lambda *a: impl.fn(node, list(a), backend))
+            us = time_call(lambda: fn(*vals), warmup, iters)
+            if us < best_us:
+                best_us, best_cfg = us, cfg
+        if tun is not None:
+            tun.bind_config(node, None)    # never leave a sweep's pin behind
+        nbytes = roundtrip if impl.memory == "roundtrip" else streamed
+        cache.record(node.op.value, AT.node_shape(node), node.spec.dtype,
+                     backend.name, impl.name, best_us, config=best_cfg,
+                     flops=flops, nbytes=nbytes)
+        out.append(ImplMeasurement(impl.name, best_us, best_cfg,
+                                   len(configs)))
+    return out

@@ -91,6 +91,44 @@ class SolModel(nn.Module):
                     getattr(self.graph, "elections_by_op", {}).items()}
         return dict(getattr(self.graph, "elections", {}))
 
+    def check_provenance(self,
+                         kinds: Tuple[str, ...] = ("linear", "matmul",
+                                                   "attention"),
+                         require: Tuple[str, ...] = ("measured",)
+                         ) -> list:
+        """Serving audit: every node of the given OpKinds must have been
+        elected from an allowed provenance source (default: autotune-cache
+        measurements).  Returns a list of violation strings — empty means
+        every dispatch of those kinds runs an impl the measurement data
+        actually elected, not a silent roofline fallback."""
+        return provenance_violations(self.impl_report(by_kind=True),
+                                     self.impl_report(provenance=True),
+                                     kinds=kinds, require=require)
+
+
+def provenance_violations(by_op: Dict[str, Any], prov: Dict[str, Any],
+                          kinds: Tuple[str, ...] = ("linear", "matmul",
+                                                    "attention"),
+                          require: Tuple[str, ...] = ("measured",)) -> list:
+    """Shared audit over the two ``impl_report`` views (works for a live
+    ``SolModel`` and a ``DeployedModel`` alike): for each elected impl of
+    the target OpKinds, every recorded election source must be in
+    ``require``.  An impl with no provenance at all is also a violation —
+    silence is not evidence."""
+    out = []
+    for kind in kinds:
+        for impl_name in (by_op.get(kind) or {}):
+            sources = (prov.get(impl_name) or {}).get("sources", {})
+            bad = {s: n for s, n in sources.items()
+                   if s not in require and n}
+            if not sources:
+                out.append(f"{kind}→{impl_name}: no election provenance "
+                           f"recorded")
+            elif bad:
+                out.append(f"{kind}→{impl_name}: elected via {bad}, "
+                           f"require {tuple(require)}")
+    return out
+
 
 def optimize(model: nn.Module, input_shape: Tuple[int, ...], *,
              backend: str | Backend = "xla", training: bool = False,

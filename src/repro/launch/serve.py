@@ -1,85 +1,663 @@
-"""Serving driver: batched prefill + decode with KV caches.
+"""SOL serving subsystem: continuous batching ON the elected/tuned graph.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+The runtime chapter (paper Sec. IV-C) under real traffic: earlier drivers
+served ``models/backbone.py`` directly, bypassing everything the middleware
+exists for — elections, pinned autotune configs, Pallas kernels.  This
+server routes every forward through ``frontends/optimize.SolModel`` (or a
+``frontends/deploy`` artifact, closing the Sec. III-C deployment loop), so
+the impls that serve traffic are exactly the impls the conformance matrix
+validates and the autotune cache elected.
+
+Pieces, and which paper mechanism each reproduces:
+
+* :class:`SlotArena` — per-request KV-cache slots in an
+  ``AsyncQueue``-backed arena: admission ``malloc_async``s a slot-sized
+  virtual allocation, the prompt lands via ``memcpy_async``, each decoded
+  token is appended with virtual-pointer arithmetic (``ptr + len·4``), and
+  eviction is an async free.  Admission blocks when no slot is free;
+  eviction on completion frees the slot for the next pending request —
+  that interleaving is what lets prefill and decode share the machine.
+* **Bucket padding aligned with the autotune cache** — batches are padded
+  to ``core.autotune.ceil_pow2`` buckets per dim.  A power of two is its
+  own cache bucket, so every served shape hits the measured-timing entries
+  and pinned ``Tunable`` configs exactly, never the roofline fallback.
+* **Packed staging** — each step's embedded rows go host→device as ONE DMA
+  via ``runtime.packed.stage_batch`` (the VEO-udma gather policy).
+* **Continuous batching** — the scheduler serves the least-recently-served
+  ``max_batch`` residents each step (starvation-free round-robin); newly
+  admitted requests prefill in the same forward that decodes older ones
+  (causal models make prefill and decode the same padded forward here, so
+  the batch mixes phases freely).
+* **Provenance enforcement** — with ``strict_provenance`` every
+  LINEAR/MATMUL/ATTENTION dispatch must have been elected from autotune
+  measurements (``SolModel.check_provenance``); a cold cache raises
+  :class:`ProvenanceError` instead of silently serving roofline guesses.
+  ``warm_autotune`` measures every admissible impl (sweeping declared
+  ``Tunable`` spaces) for every bucket the workload can produce.
+
+Smoke run (what CI executes):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import sys
 import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config, get_smoke
-from ..models import backbone as B
-from .mesh import make_debug_mesh, make_production_mesh
+from ..backends import get_backend
+from ..core import autotune as AT
+from ..core import measure, passes
+from ..core.ir import OpKind
+from ..frontends import nn
+from ..frontends.extract import extract
+from ..frontends.optimize import SolModel, optimize, provenance_violations
+from ..runtime import packed
+from ..runtime.async_queue import AsyncQueue
+
+TOKEN_BYTES = 4                    # int32 tokens in the slot arena
+MIN_SEQ_BUCKET = 8                 # smallest padded sequence bucket
+SERVED_KINDS = (OpKind.LINEAR, OpKind.MATMUL, OpKind.ATTENTION)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--production-mesh", action="store_true")
-    args = ap.parse_args()
+class ProvenanceError(RuntimeError):
+    """A bucket model would serve elections that did not come from autotune
+    measurements — the silent-roofline-fallback the smoke run must catch."""
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_production_mesh() if args.production_mesh \
-        else make_debug_mesh(1, 1)
-    key = jax.random.PRNGKey(0)
-    params = B.init_params(cfg, key)
-    max_seq = args.prompt_len + args.gen
 
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    enc_out = None
-    extra = {}
-    if cfg.frontend == "audio":
-        frames = jnp.zeros((args.batch, cfg.enc_dec.enc_seq, cfg.d_model))
-        enc_out = B.run_encoder(cfg, params, frames)
-    if cfg.frontend == "vision":
-        extra["patches"] = jnp.zeros((args.batch, cfg.n_patches,
-                                      cfg.d_model))
+# ---------------------------------------------------------------------------
+# serving model
+# ---------------------------------------------------------------------------
 
-    decode = jax.jit(
-        lambda p, c, t, pos: B.decode_step(cfg, p, c, t, pos,
-                                           enc_out=enc_out),
-        donate_argnums=(1,))
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Shape of the served LM + scheduler limits.  ``max_seq`` must be a
+    power of two so the largest sequence bucket is exactly the context
+    bound."""
 
-    with mesh:
-        # prefill: replay prompt through decode steps to fill the cache
-        # (token-by-token prefill — the batched prefill path is exercised by
-        # benchmarks/serving.py; this driver shows the decode loop)
-        cache = B.init_cache(cfg, args.batch, max_seq)
-        t0 = time.time()
-        logits = None
-        for t in range(args.prompt_len):
-            logits, cache = decode(params, cache, prompts[:, t:t + 1],
-                                   jnp.asarray(t))
-        t_prefill = time.time() - t0
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    vocab: int = 128
+    max_seq: int = 64              # per-request context bound (pow2)
+    max_batch: int = 4             # requests per forward step
+    slots: int = 8                 # KV-slot arena size (resident requests)
+    backend: str = "xla"
+    seed: int = 0
 
-        tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out_tokens = [tokens]
-        t0 = time.time()
-        for t in range(args.prompt_len, max_seq - 1):
-            logits, cache = decode(params, cache, tokens, jnp.asarray(t))
-            tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            out_tokens.append(tokens)
-        dt = time.time() - t0
-        gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    def __post_init__(self):
+        if self.max_seq != AT.ceil_pow2(self.max_seq):
+            raise ValueError(f"max_seq {self.max_seq} must be a power of "
+                             f"two (it is the largest sequence bucket)")
+        if self.max_batch < 1 or self.slots < 1:
+            raise ValueError("max_batch and slots must be >= 1")
 
-    n_gen = gen.shape[1] - 1
-    print(f"[serve] {cfg.name}: batch {args.batch}, prompt "
-          f"{args.prompt_len}, generated {n_gen} tokens/seq")
-    print(f"[serve] prefill {t_prefill:.2f}s; decode "
-          f"{dt / max(n_gen, 1) * 1000:.1f} ms/token/batch "
-          f"({args.batch * n_gen / max(dt, 1e-9):.1f} tok/s)")
-    print(f"[serve] sample continuation: {gen[0, :12].tolist()}")
+
+def build_lm(cfg: ServeConfig) -> nn.Sequential:
+    """The served module: pre-norm transformer blocks + LM head.  Plain
+    framework modules — SOL extracts/optimizes them; the server never calls
+    their eager forward."""
+    blocks = [nn.transformer_block(cfg.d_model, cfg.n_heads)
+              for _ in range(cfg.n_layers)]
+    return nn.Sequential(*blocks, nn.Linear(cfg.d_model, cfg.vocab))
+
+
+def embedding_table(cfg: ServeConfig) -> np.ndarray:
+    """Deterministic host-side token embedding.  Token→vector lookup is a
+    host gather (the SOL IR starts at dense tensors); everything after it —
+    every LINEAR/MATMUL/ATTENTION — runs through the elected graph."""
+    rng = np.random.default_rng(cfg.seed)
+    return (rng.standard_normal((cfg.vocab, cfg.d_model)) * 0.25
+            ).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# requests + KV-slot arena
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                       # int32 (L,)
+    max_new_tokens: int
+    submitted: float
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    phase: str = "pending"                   # pending|prefill|decode|done
+    first_token_time: Optional[float] = None
+    finished_time: Optional[float] = None
+    last_served_step: int = -1
+    served_steps: List[int] = dataclasses.field(default_factory=list)
+    last_logits: Optional[np.ndarray] = None
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return self.phase == "done"
+
+
+class SlotArena:
+    """Per-request KV-cache slots backed by the async queue's virtual
+    allocator (paper Sec. IV-C).  A slot holds the request's materialized
+    token context (`max_seq` int32s); admission/append/evict are all
+    enqueued operations, so the arena exercises the exact machinery the
+    runtime bugfixes harden: snapshot-at-enqueue memcopies, error
+    re-raising at ``synchronize``, loud use-after-free."""
+
+    def __init__(self, queue: AsyncQueue, n_slots: int, max_seq: int):
+        self.queue = queue
+        self.max_seq = max_seq
+        self._free = list(range(n_slots - 1, -1, -1))
+        self._ptr: Dict[int, Any] = {}
+        self._len: Dict[int, int] = {}
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def resident(self) -> int:
+        return len(self._ptr)
+
+    def admit(self, tokens: np.ndarray) -> Optional[int]:
+        """Allocate a slot and stage the prompt into it; None when full
+        (the request waits in the pending queue — admission control)."""
+        if not self._free:
+            return None
+        tokens = np.ascontiguousarray(tokens, np.int32)
+        if len(tokens) > self.max_seq:
+            raise ValueError(f"prompt of {len(tokens)} tokens exceeds the "
+                             f"{self.max_seq}-token slot")
+        slot = self._free.pop()
+        ptr = self.queue.malloc_async(self.max_seq * TOKEN_BYTES)
+        self.queue.memcpy_async(ptr, tokens)
+        self._ptr[slot] = ptr
+        self._len[slot] = len(tokens)
+        return slot
+
+    def append(self, slot: int, token: int) -> None:
+        """Append one decoded token — virtual-pointer arithmetic into the
+        live allocation, no host-side reassembly."""
+        n = self._len[slot]
+        if n >= self.max_seq:
+            raise ValueError(f"slot {slot} is full ({n} tokens)")
+        self.queue.memcpy_async(self._ptr[slot] + n * TOKEN_BYTES,
+                                np.asarray([token], np.int32))
+        self._len[slot] = n + 1
+
+    def tokens(self, slot: int) -> np.ndarray:
+        """The slot's current context.  Callers must ``synchronize`` the
+        queue first so staged writes have landed."""
+        buf = self.queue.allocator.resolve(self._ptr[slot])
+        n = self._len[slot]
+        return buf[:n * TOKEN_BYTES].view(np.int32).copy()
+
+    def evict(self, slot: int) -> None:
+        self.queue.free_async(self._ptr.pop(slot))
+        del self._len[slot]
+        self._free.append(slot)
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+class SolServer:
+    """Continuous-batching server over the SOL pipeline.
+
+    ``deployed`` switches the server to artifact mode: a mapping
+    ``(batch_bucket, seq_bucket) → deploy blob / DeployedModel``; buckets
+    outside the mapping raise instead of silently compiling a parallel
+    live path."""
+
+    def __init__(self, cfg: Optional[ServeConfig] = None,
+                 model: Optional[nn.Module] = None, *,
+                 deployed: Optional[Dict[Tuple[int, int], Any]] = None,
+                 strict_provenance: bool = False,
+                 device=None):
+        self.cfg = cfg or ServeConfig()
+        self.backend = get_backend(self.cfg.backend)
+        self.strict_provenance = strict_provenance
+        self._device = device
+        self.embed = embedding_table(self.cfg)
+        self.queue = AsyncQueue()
+        self.arena = SlotArena(self.queue, self.cfg.slots, self.cfg.max_seq)
+        self._models: Dict[Tuple[int, int], Any] = {}
+        self._deploy_only = deployed is not None
+        self.served_elections: Dict[Tuple[int, int], Dict[str, Any]] = {}
+        if deployed is not None:
+            from ..frontends import deploy as D
+            for key, art in deployed.items():
+                m = D.load(art, device) if isinstance(art, bytes) else art
+                self._models[tuple(key)] = self._audit(m, tuple(key))
+            self.model = model
+        else:
+            self.model = model if model is not None else build_lm(self.cfg)
+        self._pending: "deque[Request]" = deque()
+        self._active: List[Request] = []
+        self._finished: List[Request] = []
+        self._next_rid = 0
+        self._step = 0
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self.stats = {"steps": 0, "dmas": 0, "tokens": 0, "prefills": 0,
+                      "decodes": 0, "admitted": 0, "evicted": 0,
+                      "buckets": {}}
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: int = 16) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size >= self.cfg.max_seq:
+            raise ValueError(f"prompt of {prompt.size} tokens leaves no "
+                             f"room to decode within max_seq="
+                             f"{self.cfg.max_seq}")
+        if np.any(prompt < 0) or np.any(prompt >= self.cfg.vocab):
+            raise ValueError("prompt token out of vocabulary range")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max(1, int(max_new_tokens)),
+                      submitted=time.perf_counter())
+        self._next_rid += 1
+        self._pending.append(req)
+        return req
+
+    def step(self) -> List[int]:
+        """One scheduler tick: admit → select → stage (one DMA) → forward
+        through the elected graph → sample/append/evict.  Returns the rids
+        served this step."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        # admission: pending requests claim free KV slots
+        while self._pending and self.arena.free_slots:
+            req = self._pending.popleft()
+            req.slot = self.arena.admit(req.prompt)
+            req.phase = "prefill"
+            self._active.append(req)
+            self.stats["admitted"] += 1
+        if not self._active:
+            return []
+        # fairness: least-recently-served first (rid FIFO tiebreak) — every
+        # resident request is served at least once per ceil(R/max_batch)
+        # steps, so nothing starves
+        batch = sorted(self._active,
+                       key=lambda r: (r.last_served_step, r.rid)
+                       )[: self.cfg.max_batch]
+        # flush staged slot writes; a failed async op re-raises HERE
+        self.queue.synchronize()
+        rows_tok = [self.arena.tokens(r.slot) for r in batch]
+        lens = [len(t) for t in rows_tok]
+        bucket = self._bucket(len(batch), max(lens))
+        bb, sb = bucket
+        rows = []
+        for t in rows_tok:
+            padded = np.zeros(sb, np.int32)
+            padded[: len(t)] = t
+            rows.append(self.embed[padded])            # (sb, d_model) f32
+        for _ in range(bb - len(batch)):
+            rows.append(np.zeros((sb, self.cfg.d_model), np.float32))
+        x = packed.stage_batch(rows, self._device)     # ONE DMA per batch
+        self.stats["dmas"] += 1
+        model = self._model_for(bucket)
+        logits = np.asarray(model(x))                  # (bb, sb, vocab)
+        self._step += 1
+        self.stats["steps"] += 1
+        key = f"{bb}x{sb}"
+        self.stats["buckets"][key] = self.stats["buckets"].get(key, 0) + 1
+        now = time.perf_counter()
+        for i, req in enumerate(batch):
+            # copy: a bare slice would pin the whole step's logits tensor
+            # in memory for as long as the request record lives
+            row = logits[i, lens[i] - 1].copy()
+            req.last_logits = row
+            tok = int(np.argmax(row))
+            if req.phase == "prefill":
+                req.first_token_time = now
+                req.phase = "decode"
+                self.stats["prefills"] += 1
+            else:
+                self.stats["decodes"] += 1
+            req.generated.append(tok)
+            req.last_served_step = self._step
+            req.served_steps.append(self._step)
+            self.stats["tokens"] += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or req.length >= self.cfg.max_seq):
+                req.phase = "done"
+                req.finished_time = now
+                self.arena.evict(req.slot)
+                req.slot = None
+                self.stats["evicted"] += 1
+                self._active.remove(req)
+                self._finished.append(req)
+            else:
+                self.arena.append(req.slot, tok)
+        self._t_last = time.perf_counter()
+        return [r.rid for r in batch]
+
+    def run(self, max_steps: int = 100_000) -> Dict[str, Any]:
+        while self._pending or self._active:
+            if self._step >= max_steps:
+                raise RuntimeError(f"serving exceeded {max_steps} steps "
+                                   f"with requests still in flight")
+            self.step()
+        return self.summary()
+
+    def close(self) -> None:
+        self.queue.close()
+
+    # -- buckets + models ----------------------------------------------------
+
+    def _bucket(self, n_rows: int, max_len: int) -> Tuple[int, int]:
+        """The (batch, seq) pow2 bucket a physical batch is padded to —
+        aligned with ``core.autotune`` keying so served shapes hit measured
+        cache entries exactly."""
+        sb = min(self.cfg.max_seq,
+                 max(min(MIN_SEQ_BUCKET, self.cfg.max_seq),
+                     AT.ceil_pow2(max_len)))
+        return (AT.ceil_pow2(n_rows), sb)
+
+    def bucket_space(self, max_len: Optional[int] = None
+                     ) -> List[Tuple[int, int]]:
+        """Every (batch, seq) bucket the current workload can produce —
+        what ``warm_autotune`` measures ahead of serving."""
+        if max_len is None:
+            reqs = list(self._pending) + self._active
+            if not reqs:
+                raise ValueError("no requests to derive the bucket space "
+                                 "from; pass max_len explicitly")
+            max_len = max(min(self.cfg.max_seq,
+                              len(r.prompt) + r.max_new_tokens)
+                          for r in reqs)
+        smax = min(self.cfg.max_seq, AT.ceil_pow2(max_len))
+        sbs = []
+        s = min(MIN_SEQ_BUCKET, self.cfg.max_seq)
+        while s <= smax:
+            sbs.append(s)
+            s *= 2
+        bbs = []
+        b = 1
+        while b <= AT.ceil_pow2(self.cfg.max_batch):
+            bbs.append(b)
+            b *= 2
+        return [(b, s) for b in bbs for s in sbs]
+
+    def _model_for(self, bucket: Tuple[int, int]):
+        m = self._models.get(bucket)
+        if m is not None:
+            return m
+        if self._deploy_only:
+            raise KeyError(
+                f"bucket {bucket} not among the deployed artifacts "
+                f"{sorted(self._models)} — deploy-mode serving never "
+                f"falls back to a live compile")
+        bb, sb = bucket
+        sol = optimize(self.model, (bb, sb, self.cfg.d_model),
+                       backend=self.backend)
+        self._models[bucket] = self._audit(sol, bucket)
+        return sol
+
+    def _audit(self, model, bucket: Tuple[int, int]):
+        """Record (and under ``strict_provenance`` enforce) which impls the
+        bucket model serves."""
+        kinds = tuple(k.value for k in SERVED_KINDS)
+        self.served_elections[bucket] = {
+            "by_op": {k: dict(v) for k, v in
+                      model.impl_report(by_kind=True).items()
+                      if k in kinds},
+            "provenance": model.impl_report(provenance=True),
+        }
+        if self.strict_provenance:
+            viol = provenance_violations(model.impl_report(by_kind=True),
+                                         model.impl_report(provenance=True),
+                                         kinds=kinds)
+            if isinstance(model, SolModel):
+                viol += self._exact_bucket_violations(model)
+            if viol:
+                raise ProvenanceError(
+                    f"bucket {bucket} would serve unmeasured elections "
+                    f"(warm the autotune cache first): {viol}")
+        return model
+
+    def _exact_bucket_violations(self, model: SolModel) -> List[str]:
+        """An election can carry 'measured' provenance via the cache's
+        nearest-bucket fallback — timings from a *different* shape.  Strict
+        serving requires every LINEAR/MATMUL/ATTENTION node's EXACT bucket
+        to hold measurements (a late-submitted request that opens a new
+        bucket needs another ``warm_autotune()`` call, which skips
+        already-measured buckets)."""
+        cache = AT.get_cache()
+        out = []
+        for node in model.graph.topo():
+            if node.op not in SERVED_KINDS:
+                continue
+            shape = AT.node_shape(node)
+            if not cache.has_bucket(node.op.value, shape, node.spec.dtype,
+                                    self.backend.name):
+                out.append(f"{node.op.value}@{shape}: measured via "
+                           f"nearest-bucket fallback, not this bucket")
+        return out
+
+    def export_artifacts(self) -> Dict[Tuple[int, int], bytes]:
+        """Deploy every live bucket model (Sec. III-C): the returned blobs
+        feed ``SolServer(deployed=...)`` for artifact serving."""
+        from ..frontends import deploy as D
+        out = {}
+        for (bb, sb), m in self._models.items():
+            if isinstance(m, SolModel):
+                out[(bb, sb)] = D.deploy(m, (bb, sb, self.cfg.d_model))
+        return out
+
+    # -- autotune warmup -----------------------------------------------------
+
+    def warm_autotune(self, max_len: Optional[int] = None, *,
+                      warmup: int = 1, iters: int = 3) -> Dict[str, int]:
+        """Measure every admissible impl of every LINEAR/MATMUL/ATTENTION
+        node — sweeping declared ``Tunable`` config spaces — for every
+        bucket the workload can produce, and record the timings into the
+        election cache.  After this, bucket compiles elect from
+        measurements ('measured'/'pinned' provenance), exactly like
+        ``benchmarks/autotune.py`` but scoped to the served graph.
+
+        Measurements land in the process-wide ``autotune.get_cache()`` —
+        the cache the election pass and the strict audit read; install a
+        different one with ``autotune.set_cache`` BEFORE warming."""
+        if self._deploy_only:
+            raise RuntimeError("deploy-mode serving has no live graphs to "
+                               "warm; tune before deploying instead")
+        cache = AT.get_cache()
+        counts = {"nodes": 0, "impls": 0, "skipped": 0}
+        seen = set()
+        for bb, sb in self.bucket_space(max_len):
+            g = extract(self.model, (bb, sb, self.cfg.d_model))
+            g = passes.run_pipeline(g, self.backend)
+            for node in g.topo():
+                if node.op not in SERVED_KINDS:
+                    continue
+                shape = AT.node_shape(node)
+                key = (node.op.value, shape, node.spec.dtype)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if cache.has_bucket(node.op.value, shape, node.spec.dtype,
+                                    self.backend.name):
+                    counts["skipped"] += 1
+                    continue
+                counts["nodes"] += 1
+                counts["impls"] += _measure_node(
+                    node, self.backend, cache, warmup=warmup, iters=iters)
+        return counts
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        done = self._finished
+        lat = [1e3 * (r.finished_time - r.submitted) for r in done
+               if r.finished_time is not None]
+        ttft = [1e3 * (r.first_token_time - r.submitted) for r in done
+                if r.first_token_time is not None]
+        # wall clock of the serving itself (first step → last step), so the
+        # metric is stable however long after run() summary() is called
+        wall = ((self._t_last - self._t0)
+                if self._t0 is not None and self._t_last is not None
+                else 0.0)
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        return {
+            "requests": len(done),
+            "tokens": self.stats["tokens"],
+            "tokens_per_s": self.stats["tokens"] / wall if wall else 0.0,
+            "steps": self.stats["steps"],
+            "dmas": self.stats["dmas"],
+            "prefills": self.stats["prefills"],
+            "decodes": self.stats["decodes"],
+            "latency_ms": {"p50": pct(lat, 50), "p99": pct(lat, 99)},
+            "ttft_ms": {"p50": pct(ttft, 50), "p99": pct(ttft, 99)},
+            "buckets": dict(self.stats["buckets"]),
+            "queue": self.queue.stats(),
+        }
+
+
+def _measure_node(node, backend, cache: AT.AutotuneCache, *,
+                  warmup: int, iters: int) -> int:
+    """Time every admissible impl of one node (all tunable configs) through
+    the shared sweep (``core.measure.sweep_node`` — the same code path as
+    ``benchmarks/autotune.py``) and return how many impls were recorded."""
+    rng = np.random.default_rng(0)
+    vals = [jnp.asarray(rng.standard_normal(i.spec.shape), jnp.float32)
+            for i in node.inputs]
+    return len(measure.sweep_node(node, vals, backend, cache,
+                                  warmup=warmup, iters=iters))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _smoke_workload(cfg: ServeConfig, n_requests: int, gen: int,
+                    seed: int = 1) -> List[Tuple[np.ndarray, int]]:
+    hi = min(24, cfg.max_seq - gen - 1)    # prompts leave room to decode
+    if hi <= 4:
+        raise ValueError(
+            f"gen={gen} leaves no room for prompts within "
+            f"max_seq={cfg.max_seq}; lower --gen or raise --max-seq")
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_requests):
+        plen = int(rng.integers(4, hi))
+        out.append((rng.integers(0, cfg.vocab, plen, dtype=np.int32)
+                    .astype(np.int32), gen))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + strict measured-provenance audit + "
+                         "deploy round-trip; what CI runs")
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--vocab", type=int, default=128)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--json", help="write the serve summary to this path")
+    ap.add_argument("--no-deploy-roundtrip", action="store_true",
+                    help="skip the artifact round-trip leg of --smoke")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = ServeConfig(d_model=32, n_heads=2, n_layers=1, vocab=64,
+                          max_seq=32, max_batch=4, slots=4,
+                          backend=args.backend)
+        args.requests, args.gen = min(args.requests, 6), min(args.gen, 6)
+    else:
+        cfg = ServeConfig(d_model=args.d_model, n_heads=args.n_heads,
+                          n_layers=args.layers, vocab=args.vocab,
+                          max_seq=args.max_seq, max_batch=args.max_batch,
+                          slots=args.slots, backend=args.backend)
+
+    server = SolServer(cfg, strict_provenance=True)
+    workload = _smoke_workload(cfg, args.requests, args.gen)
+    for prompt, g in workload:
+        server.submit(prompt, g)
+
+    t0 = time.perf_counter()
+    counts = server.warm_autotune()
+    print(f"[serve] autotune warmup on {cfg.backend}: "
+          f"{counts['impls']} impl timings over {counts['nodes']} "
+          f"(op, shape) keys ({counts['skipped']} already cached) in "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    summary = server.run()
+    print(f"[serve] {summary['requests']} requests, {summary['tokens']} "
+          f"tokens in {summary['steps']} steps "
+          f"({summary['tokens_per_s']:.1f} tok/s, one packed DMA per "
+          f"step: {summary['dmas']})")
+    print(f"[serve] latency p50/p99 = {summary['latency_ms']['p50']:.1f}/"
+          f"{summary['latency_ms']['p99']:.1f} ms; ttft p50 = "
+          f"{summary['ttft_ms']['p50']:.1f} ms; buckets "
+          f"{summary['buckets']}")
+
+    failures = []
+    for bucket, rec in sorted(server.served_elections.items()):
+        prov = rec["provenance"]
+        for kind, impls in rec["by_op"].items():
+            for name in impls:
+                entry = prov.get(name, {})
+                srcs = entry.get("sources", {})
+                pins = entry.get("pinned", "")
+                print(f"[serve] bucket {bucket} {kind} → {name} "
+                      f"sources={srcs}"
+                      + (f" pinned={pins}" if pins else ""))
+                if set(srcs) - {"measured"} or not srcs:
+                    failures.append(f"{bucket}:{kind}->{name}:{srcs}")
+    if failures:
+        print(f"[serve] unmeasured elections served: {failures}",
+              file=sys.stderr)
+        return 1
+
+    if args.smoke and not args.no_deploy_roundtrip:
+        arts = server.export_artifacts()
+        replay = SolServer(cfg, deployed=arts, strict_provenance=True)
+        reqs = [replay.submit(p, g) for p, g in workload]
+        replay.run()
+        live_by_rid = {r.rid: r.generated for r in server._finished}
+        for r in reqs:
+            if r.generated != live_by_rid[r.rid]:
+                print(f"[serve] deploy round-trip DIVERGED for request "
+                      f"{r.rid}: {r.generated} != {live_by_rid[r.rid]}",
+                      file=sys.stderr)
+                return 1
+        print(f"[serve] deploy round-trip: {len(arts)} bucket artifacts "
+              f"served {len(reqs)} requests bit-identically")
+        replay.close()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"[serve] wrote {args.json}")
+    server.close()
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

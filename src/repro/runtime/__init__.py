@@ -1,8 +1,11 @@
-from .async_queue import AsyncQueue, VirtualAllocator, VirtualPtr
-from .packed import pack_transfer, unpack_on_device, PackedTransfer
+from .async_queue import (AsyncQueue, UseAfterFreeError, VirtualAllocator,
+                          VirtualPtr)
+from .packed import (PackedTransfer, pack_transfer, stage_batch, transfer,
+                     unpack_on_device)
 from .straggler import StragglerMonitor
 from .failures import FailureSimulator, run_with_restart
 
-__all__ = ["AsyncQueue", "VirtualAllocator", "VirtualPtr", "pack_transfer",
-           "unpack_on_device", "PackedTransfer", "StragglerMonitor",
+__all__ = ["AsyncQueue", "UseAfterFreeError", "VirtualAllocator",
+           "VirtualPtr", "pack_transfer", "unpack_on_device", "transfer",
+           "stage_batch", "PackedTransfer", "StragglerMonitor",
            "FailureSimulator", "run_with_restart"]

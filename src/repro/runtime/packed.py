@@ -20,6 +20,17 @@ import numpy as np
 
 LATENCY_THRESHOLD_BYTES = 1 << 14     # small transfers go direct
 
+# Process-wide transfer accounting: how many DMAs (packed vs direct) the
+# policy issued and how many host bytes crossed.  The serving scheduler and
+# the staged-exactly-once deployment test read these.
+TRANSFER_STATS = {"packed_dmas": 0, "direct_dmas": 0, "bytes": 0}
+
+
+def reset_transfer_stats() -> Dict[str, int]:
+    prev = dict(TRANSFER_STATS)
+    TRANSFER_STATS.update(packed_dmas=0, direct_dmas=0, bytes=0)
+    return prev
+
 
 @dataclasses.dataclass
 class PackedTransfer:
@@ -67,6 +78,34 @@ def transfer(arrays: Sequence[np.ndarray], device=None) -> List[jax.Array]:
     """Policy split: small singletons direct (latency-optimized); batches of
     small tensors packed (bandwidth-optimized)."""
     total = sum(a.nbytes for a in arrays)
+    TRANSFER_STATS["bytes"] += total
     if len(arrays) == 1 or total < LATENCY_THRESHOLD_BYTES:
+        TRANSFER_STATS["direct_dmas"] += len(arrays)
         return [jax.device_put(a, device) for a in arrays]
+    TRANSFER_STATS["packed_dmas"] += 1
     return unpack_on_device(pack_transfer(arrays, device))
+
+
+def stage_batch(rows: Sequence[np.ndarray], device=None) -> jax.Array:
+    """Stage a serving batch host→device as ONE DMA and stack on device.
+
+    Every row must share shape and dtype (the scheduler has already padded
+    them to a common bucket).  Unlike :func:`transfer`, a multi-row batch is
+    ALWAYS gathered into one packed segment — the batch is about to be
+    consumed as a single tensor, so it is a bandwidth object even when it
+    is small (the paper's VEO-udma policy applied to request batches) —
+    and the stack is a device-side reslice of the packed buffer."""
+    if not rows:
+        raise ValueError("stage_batch needs at least one row")
+    rows = [np.ascontiguousarray(r) for r in rows]
+    shapes = {r.shape for r in rows}
+    if len(shapes) > 1 or len({str(r.dtype) for r in rows}) > 1:
+        raise ValueError(
+            f"stage_batch needs uniform rows, got shapes "
+            f"{sorted(shapes)} — pad to a common bucket first")
+    TRANSFER_STATS["bytes"] += sum(r.nbytes for r in rows)
+    if len(rows) == 1:
+        TRANSFER_STATS["direct_dmas"] += 1
+        return jnp.stack([jax.device_put(rows[0], device)])
+    TRANSFER_STATS["packed_dmas"] += 1
+    return jnp.stack(unpack_on_device(pack_transfer(rows, device)))

@@ -82,6 +82,68 @@ def test_deploy_roundtrip_and_independence():
     np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
 
 
+def test_deployed_params_staged_exactly_once():
+    """ISSUE 5 regression: DeployedModel must device-put its params ONCE at
+    load (via runtime.packed.transfer), not re-upload host arrays on every
+    call."""
+    from repro.runtime import packed as P
+    model = nn.mlp_8192(2, 32, 16, 4)
+    sol = optimize(model, (1, 16))
+    blob = D.deploy(sol, (1, 16))
+    P.reset_transfer_stats()
+    served = D.load(blob)
+    assert served.staged_leaves == len(sol._params_for_call())
+    after_load = dict(P.TRANSFER_STATS)
+    assert after_load["packed_dmas"] + after_load["direct_dmas"] >= 1
+    # staged buffers are device arrays, not host ndarrays
+    leaves = jax.tree.leaves(served.params)
+    assert leaves and all(isinstance(v, jax.Array) for v in leaves)
+    x = jnp.ones((1, 16), jnp.float32)
+    y1 = np.asarray(served(x))
+    y2 = np.asarray(served(x))
+    assert dict(P.TRANSFER_STATS) == after_load, \
+        "params were re-staged after load"
+    np.testing.assert_allclose(y1, y2)
+    np.testing.assert_allclose(y1, np.asarray(sol(np.ones((1, 16),
+                                                          np.float32))),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_export_fn_nested_pytree_roundtrip():
+    """ISSUE 5 regression: the artifact format must round-trip NESTED dict
+    params, not just the flat SolModel dict."""
+    params = {
+        "block": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                  "b": np.ones(3, np.float32)},
+        "scale": np.float32(2.0),
+    }
+
+    def fn(p, x):
+        return (x @ p["block"]["w"] + p["block"]["b"]) * p["scale"]
+
+    blob = D.export_fn(fn, params,
+                       jax.ShapeDtypeStruct((4, 2), jnp.float32))
+    m = D.load(blob)
+    assert set(m.params) == {"block", "scale"}
+    assert set(m.params["block"]) == {"w", "b"}
+    x = np.random.default_rng(0).standard_normal((4, 2)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(m(jnp.asarray(x))),
+                               np.asarray(fn(params, x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_deployed_model_carries_election_metadata():
+    model = nn.mlp_8192(2, 32, 16, 4)
+    sol = optimize(model, (1, 16))
+    loaded = D.load(D.deploy(sol, (1, 16)))
+    assert loaded.impl_report() == sol.impl_report()
+    assert loaded.impl_report(by_kind=True) == sol.impl_report(by_kind=True)
+    live = sol.impl_report(provenance=True)
+    dep = loaded.impl_report(provenance=True)
+    assert {k: v["sources"] for k, v in dep.items()} \
+        == {k: v["sources"] for k, v in live.items()}
+
+
 _LAYER = st.sampled_from(["linear", "relu", "gelu", "ln"])
 
 

@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.runtime import (AsyncQueue, VirtualAllocator, VirtualPtr,
-                           pack_transfer, unpack_on_device)
+from repro.runtime import (AsyncQueue, UseAfterFreeError, VirtualAllocator,
+                           VirtualPtr, pack_transfer, unpack_on_device)
 from repro.runtime.packed import transfer
 
 
@@ -53,6 +53,77 @@ def test_async_queue_pointer_arithmetic_before_materialization():
     q.memcpy_async(sub, np.full(16, 7, np.uint8))
     q.synchronize()
     assert (q.allocator.resolve(ptr)[1024:1040] == 7).all()
+    q.close()
+
+
+# -- ISSUE 5 regression tests: async-runtime correctness ----------------------
+
+def test_async_queue_worker_survives_exception_and_reraises():
+    """A failing queued op must not kill the worker thread: the queue keeps
+    draining (no deadlocked synchronize) and the stored error is re-raised
+    on the NEXT synchronize, CUDA-style."""
+    q = AsyncQueue()
+    q.launch(lambda: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        q.synchronize()
+    # the worker is still alive: later work executes and syncs cleanly
+    ptr = q.malloc_async(64)
+    q.memcpy_async(ptr, np.arange(16, dtype=np.uint8))
+    q.synchronize()                        # error already consumed
+    assert (q.allocator.resolve(ptr)[:16] == np.arange(16)).all()
+    assert q.stats()["errors"] == 1
+    q.close()
+
+
+def test_async_queue_close_never_hangs_or_raises():
+    q = AsyncQueue()
+
+    def boom():
+        raise RuntimeError("kernel failed")
+
+    q.launch(boom)
+    q.close()                              # drains; neither hangs nor raises
+    assert isinstance(q.pending_error(), RuntimeError)
+
+
+def test_memcpy_async_snapshots_source_at_enqueue():
+    """Mutating the source AFTER enqueue must not corrupt the transfer.
+    The worker is parked on an event so the pre-fix by-reference capture
+    would deterministically read the mutated bytes."""
+    q = AsyncQueue()
+    gate = threading.Event()
+    q.launch(gate.wait)                    # park the worker
+    ptr = q.malloc_async(64)
+    src = np.arange(16, dtype=np.uint8)
+    q.memcpy_async(ptr, src)
+    src[:] = 0                             # mutate after enqueue
+    gate.set()
+    q.synchronize()
+    assert (q.allocator.resolve(ptr)[:16] == np.arange(16)).all()
+    q.close()
+
+
+def test_use_after_free_is_loud():
+    a = VirtualAllocator()
+    p = a.malloc(32)
+    a.free(p)
+    with pytest.raises(UseAfterFreeError, match=str(p.ref)):
+        a.resolve(p)
+    with pytest.raises(UseAfterFreeError):
+        a.materialize(p)
+    with pytest.raises(UseAfterFreeError):
+        a.free(p)                          # double free is loud too
+    with pytest.raises(UseAfterFreeError):
+        a.free(VirtualPtr(999 << 32))      # never-allocated ref
+
+
+def test_async_use_after_free_surfaces_at_synchronize():
+    q = AsyncQueue()
+    ptr = q.malloc_async(32)
+    q.free_async(ptr)
+    q.memcpy_async(ptr, np.zeros(4, np.uint8))   # executes after the free
+    with pytest.raises(UseAfterFreeError):
+        q.synchronize()
     q.close()
 
 

@@ -1,0 +1,294 @@
+"""Serving-subsystem tests: continuous batching through the SOL pipeline.
+
+Covers the ISSUE 5 acceptance surface: scheduler fairness (no request
+starves), bucket-padding parity against an unbatched forward at 1e-5,
+served elections matching ``impl_report(provenance=True)`` on the same
+shapes, the deploy→serve round-trip, and the single-DMA batch staging."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import autotune as AT
+from repro.frontends.offload import device
+from repro.frontends.optimize import SolModel, optimize
+from repro.launch.serve import (ProvenanceError, ServeConfig, SlotArena,
+                                SolServer, embedding_table)
+from repro.runtime import packed
+from repro.runtime.async_queue import AsyncQueue
+
+
+def tiny_cfg(**kw) -> ServeConfig:
+    base = dict(d_model=32, n_heads=2, n_layers=1, vocab=64, max_seq=32,
+                max_batch=2, slots=3, backend="xla")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+@pytest.fixture(autouse=True)
+def _native_mode_and_local_cache():
+    """Native offload mode + a private autotune cache per test, so serving
+    elections never leak into (or read from) the process-wide state other
+    tests use."""
+    device.set("cpu", 0, mode="native")
+    prev = AT.get_cache()
+    AT.set_cache(AT.AutotuneCache())
+    yield
+    AT.set_cache(prev)
+    device.set("cpu", 0, mode="native")
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fairness_no_starvation():
+    """5 requests over 3 KV slots and a max_batch of 2: every request
+    finishes, and while resident no request waits more than
+    ceil(slots/max_batch) steps between serves (LRU round-robin bound)."""
+    cfg = tiny_cfg(max_seq=16)
+    server = SolServer(cfg)
+    reqs = [server.submit([1 + i, 2, 3, 4], max_new_tokens=4)
+            for i in range(5)]
+    server.run()
+    assert server.stats["admitted"] == 5
+    assert server.stats["evicted"] == 5
+    for r in reqs:
+        assert r.done and len(r.generated) == 4
+        gaps = np.diff(r.served_steps)
+        assert gaps.size == 0 or gaps.max() <= 2, \
+            f"request {r.rid} starved: served at steps {r.served_steps}"
+    server.close()
+
+
+def test_prefill_and_decode_interleave():
+    """Admission happens mid-stream: a request submitted after serving has
+    begun gets a freed/free slot and its prefill shares batches with the
+    older requests' decode steps."""
+    cfg = tiny_cfg(max_seq=16, slots=3)
+    server = SolServer(cfg)
+    a = server.submit([1, 2, 3], max_new_tokens=6)
+    b = server.submit([4, 5], max_new_tokens=6)
+    server.step()                       # both prefill
+    late = server.submit([6, 7, 8], max_new_tokens=2)
+    server.run()
+    assert a.done and b.done and late.done
+    # the late request was served while a/b were still decoding
+    assert late.served_steps[0] <= max(a.served_steps[-1],
+                                       b.served_steps[-1])
+    assert server.stats["prefills"] == 3
+    assert server.stats["decodes"] == server.stats["tokens"] - 3
+    server.close()
+
+
+def test_admission_blocks_when_slots_full():
+    cfg = tiny_cfg(max_seq=16, slots=1, max_batch=2)
+    server = SolServer(cfg)
+    first = server.submit([1, 2], max_new_tokens=3)
+    second = server.submit([3, 4], max_new_tokens=3)
+    server.step()
+    assert first.phase != "pending" and second.phase == "pending"
+    assert server.arena.free_slots == 0
+    server.run()
+    assert first.done and second.done
+    # eviction released the slot for the second request
+    assert second.served_steps[0] > first.served_steps[-1]
+    server.close()
+
+
+def test_submit_validation():
+    server = SolServer(tiny_cfg())
+    with pytest.raises(ValueError):
+        server.submit([], 4)
+    with pytest.raises(ValueError):
+        server.submit(list(range(1, 33)), 4)          # no room to decode
+    with pytest.raises(ValueError):
+        server.submit([999], 4)                       # out of vocab
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# bucket padding ↔ autotune alignment
+# ---------------------------------------------------------------------------
+
+def test_ceil_pow2_buckets_are_their_own_cache_bucket():
+    for d in (1, 2, 3, 5, 8, 9, 17, 31, 32, 33, 100):
+        p = AT.ceil_pow2(d)
+        assert p >= d and (p & (p - 1)) == 0
+        assert AT.bucket_dim(p) == p        # pow2 is its own bucket
+    assert AT.pad_shape((3, 11, 32)) == (4, 16, 32)
+
+
+def test_bucket_padding_parity_vs_unbatched_forward():
+    """A prompt of length 11 served through the padded (1, 16) bucket must
+    produce the same next-token logits as an unpadded, unbatched (1, 11)
+    forward through the same pipeline — at 1e-5."""
+    cfg = tiny_cfg(max_batch=1, slots=1)
+    server = SolServer(cfg)
+    prompt = (np.arange(1, 12) % cfg.vocab).astype(np.int32)
+    req = server.submit(prompt, max_new_tokens=1)
+    server.run()
+    assert req.done and req.last_logits is not None
+    assert "1x16" in server.stats["buckets"]          # served padded
+
+    x = embedding_table(cfg)[prompt][None]            # (1, 11, d_model)
+    sol = optimize(server.model, (1, len(prompt), cfg.d_model),
+                   backend=cfg.backend)
+    ref = np.asarray(sol(jnp.asarray(x)))[0, -1]
+    np.testing.assert_allclose(req.last_logits, ref, rtol=1e-5, atol=1e-5)
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# elections + provenance
+# ---------------------------------------------------------------------------
+
+def test_served_elections_match_impl_report_with_measured_provenance():
+    cfg = tiny_cfg()
+    server = SolServer(cfg, strict_provenance=True)
+    for i in range(3):
+        server.submit([i + 1, 2, 3, 4, 5], max_new_tokens=3)
+    counts = server.warm_autotune()
+    assert counts["impls"] > 0
+    server.run()
+    assert server.served_elections
+    for bucket, rec in server.served_elections.items():
+        model = server._models[bucket]
+        assert isinstance(model, SolModel)
+        assert model.check_provenance() == []
+        rep = model.impl_report(by_kind=True)
+        prov = model.impl_report(provenance=True)
+        for kind, impls in rec["by_op"].items():
+            assert rep[kind] == impls, \
+                f"served elections diverge from impl_report for {kind}"
+            for name in impls:
+                assert set(prov[name]["sources"]) == {"measured"}
+    server.close()
+
+
+def test_strict_provenance_cold_cache_is_loud():
+    """With an empty autotune cache a strict server must refuse to serve —
+    the 'silent roofline fallback' the smoke run exists to catch."""
+    server = SolServer(tiny_cfg(), strict_provenance=True)
+    server.submit([1, 2, 3], max_new_tokens=2)
+    with pytest.raises(ProvenanceError, match="unmeasured"):
+        server.run()
+    server.close()
+
+
+def test_strict_provenance_rejects_nearest_bucket_fallback():
+    """'measured' provenance via the cache's nearest-bucket fallback is
+    timings from a DIFFERENT shape: a strict server must refuse a bucket
+    whose exact shapes were never measured, even when nearby buckets were
+    — and an incremental re-warm (which skips covered buckets) unblocks."""
+    cfg = tiny_cfg()
+    server = SolServer(cfg, strict_provenance=True)
+    server.submit([1, 2, 3, 4], max_new_tokens=2)
+    server.warm_autotune()                   # covers seq bucket 8 only
+    server.submit(list(range(1, 13)), max_new_tokens=2)   # opens seq 16
+    with pytest.raises(ProvenanceError, match="nearest-bucket"):
+        server.run()
+    again = server.warm_autotune()           # warm the new bucket only
+    assert again["nodes"] > 0 and again["skipped"] > 0
+    server.run()
+    assert all(r.done for r in server._finished)
+    server.close()
+
+
+def test_warm_autotune_skips_already_measured_buckets():
+    cfg = tiny_cfg()
+    server = SolServer(cfg)
+    server.submit([1, 2, 3, 4], max_new_tokens=2)
+    first = server.warm_autotune(warmup=0, iters=1)
+    again = server.warm_autotune(warmup=0, iters=1)
+    assert first["nodes"] > 0
+    assert again["nodes"] == 0 and again["skipped"] >= first["nodes"]
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# deploy → serve round-trip
+# ---------------------------------------------------------------------------
+
+def test_deploy_serve_roundtrip():
+    cfg = tiny_cfg(max_seq=16, max_batch=2, slots=2)
+    live = SolServer(cfg)
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    live_reqs = [live.submit(p, max_new_tokens=3) for p in prompts]
+    live.run()
+    arts = live.export_artifacts()
+    assert arts, "live serving compiled no bucket models?"
+    assert all(isinstance(b, bytes) for b in arts.values())
+
+    replay = SolServer(cfg, deployed=arts)
+    rep_reqs = [replay.submit(p, max_new_tokens=3) for p in prompts]
+    replay.run()
+    for a, b in zip(live_reqs, rep_reqs):
+        assert a.generated == b.generated, \
+            f"artifact serving diverged for request {a.rid}"
+    # the artifact's election metadata mirrors the live model's report
+    for bucket in arts:
+        assert (replay._models[bucket].impl_report(by_kind=True)
+                == live._models[bucket].impl_report(by_kind=True))
+    # a bucket without an artifact is loud, never a silent live compile
+    with pytest.raises(KeyError, match="deploy"):
+        replay._model_for((8, 8))
+    live.close()
+    replay.close()
+
+
+# ---------------------------------------------------------------------------
+# staging + arena
+# ---------------------------------------------------------------------------
+
+def test_stage_batch_is_one_dma():
+    packed.reset_transfer_stats()
+    rows = [np.full((8, 4), i, np.float32) for i in range(3)]
+    x = packed.stage_batch(rows)
+    assert x.shape == (3, 8, 4)
+    for i in range(3):
+        assert float(np.asarray(x)[i, 0, 0]) == i
+    assert packed.TRANSFER_STATS["packed_dmas"] == 1
+    assert packed.TRANSFER_STATS["direct_dmas"] == 0
+    with pytest.raises(ValueError, match="uniform"):
+        packed.stage_batch([np.zeros((2,)), np.zeros((3,))])
+    with pytest.raises(ValueError):
+        packed.stage_batch([])
+
+
+def test_serving_uses_one_dma_per_step():
+    cfg = tiny_cfg(max_seq=16)
+    server = SolServer(cfg)
+    for i in range(3):
+        server.submit([i + 1, 2, 3], max_new_tokens=2)
+    packed.reset_transfer_stats()
+    summary = server.run()
+    assert summary["dmas"] == summary["steps"]
+    assert packed.TRANSFER_STATS["packed_dmas"] == summary["steps"]
+    server.close()
+
+
+def test_slot_arena_admission_eviction_and_pointer_append():
+    q = AsyncQueue()
+    arena = SlotArena(q, n_slots=2, max_seq=8)
+    s0 = arena.admit(np.asarray([5, 6, 7], np.int32))
+    s1 = arena.admit(np.asarray([9], np.int32))
+    assert arena.admit(np.asarray([1], np.int32)) is None   # full
+    arena.append(s0, 42)
+    q.synchronize()
+    assert arena.tokens(s0).tolist() == [5, 6, 7, 42]
+    assert arena.tokens(s1).tolist() == [9]
+    arena.evict(s1)
+    s2 = arena.admit(np.asarray([2, 3], np.int32))          # slot reused
+    assert s2 is not None
+    q.synchronize()
+    assert arena.tokens(s2).tolist() == [2, 3]
+    q.close()
+
+
+def test_slot_arena_rejects_oversized_prompt():
+    q = AsyncQueue()
+    arena = SlotArena(q, n_slots=1, max_seq=4)
+    with pytest.raises(ValueError, match="exceeds"):
+        arena.admit(np.arange(5, dtype=np.int32))
+    assert arena.free_slots == 1       # nothing leaked
+    q.close()
