@@ -14,6 +14,21 @@ Rows (``name,us_per_call,derived``):
   serve_<backend>_latency_p50   request latency percentile (us)
   serve_<backend>_latency_p99
   serve_<backend>_ttft_p50      time-to-first-token percentile (us)
+  serve_<backend>_decode_tok    us/token with the incremental decode
+                                program (ServeConfig.decode=True); derived
+                                carries tokens/s and the speedup over the
+                                re-forward baseline on the same weights
+                                and workload
+  serve_<backend>_reforward_tok us/token with the full re-forward baseline
+                                (decode=False), measured back-to-back
+  decode_step_cache<T>          one decode-program forward at resident
+                                cache length T — the T=128 vs T=1024 pair
+                                shows per-token decode cost is (near-)flat
+                                in how much context is already resident,
+                                where the re-forward rows below grow
+  reforward_step_T<T>           one full-forward step over a T-token
+                                context (what every decode step cost
+                                before the decode program existed)
   decode_<arch>_smoke           per-architecture backbone decode step
                                 (qwen2 / rwkv6 / recurrentgemma) — kept so
                                 the sequence-model scan kernels retain a
@@ -67,6 +82,109 @@ def serve_rows(backend: str = "xla", *, requests: int = 6,
     ]
 
 
+def decode_vs_reforward(backend: str = "xla", *, requests: int = 4,
+                        gen: int = 120) -> List[Tuple[str, float, str]]:
+    """Decode-heavy workload (short prompts, long generations) served twice
+    on the SAME weights: once through the incremental decode program, once
+    through the full re-forward baseline.  The first pass of each server
+    compiles the bucket models; the timed pass replays the workload on the
+    warm server, so the ratio is pure serving cost."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import autotune as AT
+    from repro.launch.serve import ServeConfig, SolServer, build_lm
+
+    base = ServeConfig(d_model=128, n_heads=4, n_layers=2, vocab=128,
+                       max_seq=256, max_batch=4, slots=4, backend=backend)
+    model = build_lm(base)
+    rng = np.random.default_rng(3)
+    workload = [(rng.integers(0, base.vocab, int(rng.integers(4, 8)),
+                              dtype=np.int32), gen)
+                for _ in range(requests)]
+    prev = AT.get_cache()
+    AT.set_cache(AT.AutotuneCache())
+    tps = {}
+    try:
+        for decode in (False, True):
+            cfg = dataclasses.replace(base, decode=decode)
+            server = SolServer(cfg, model)
+            for p, g in workload:          # compile pass: builds buckets
+                server.submit(p, g)
+            server.run()
+            toks0 = server.stats["tokens"]
+            t0 = time.perf_counter()
+            for p, g in workload:          # timed pass: warm buckets only
+                server.submit(p, g)
+            server.run()
+            dt = time.perf_counter() - t0
+            tps[decode] = (server.stats["tokens"] - toks0) / dt
+            server.close()
+    finally:
+        AT.set_cache(prev)
+    ratio = tps[True] / tps[False] if tps[False] else 0.0
+    return [
+        (f"serve_{backend}_decode_tok", 1e6 / tps[True],
+         f"{tps[True]:.1f}tok/s;x{ratio:.2f}_vs_reforward"),
+        (f"serve_{backend}_reforward_tok", 1e6 / tps[False],
+         f"{tps[False]:.1f}tok/s;baseline"),
+    ]
+
+
+def decode_flatness(backend: str = "xla", lengths=(128, 1024),
+                    iters: int = 20) -> List[Tuple[str, float, str]]:
+    """One decode-program forward at resident cache length T, next to one
+    full-forward step over a T-token context: the decode step's cost must
+    be (near-)flat in T while the re-forward step grows with it — the O(1)
+    vs O(T)-per-token claim, measured."""
+    import numpy as np
+
+    from repro.frontends.extract import extract_decode
+    from repro.frontends.optimize import compile_graph, optimize
+    from repro.launch.serve import ServeConfig, build_lm
+
+    cfg = ServeConfig(d_model=64, n_heads=4, n_layers=2, vocab=128,
+                      max_seq=max(lengths), backend=backend)
+    model = build_lm(cfg)
+    rng = np.random.default_rng(0)
+    rows: List[Tuple[str, float, str]] = []
+    decode_us = {}
+    for t_len in lengths:
+        sol = compile_graph(
+            model, extract_decode(model, 1, t_len, cfg.d_model), backend)
+        vals = []
+        for inp in sol.graph.inputs:
+            if inp.spec.dtype.startswith("int"):
+                vals.append(jnp.full(inp.spec.shape, t_len - 1, jnp.int32))
+            else:
+                vals.append(jnp.asarray(
+                    rng.standard_normal(inp.spec.shape), jnp.float32))
+        jax.block_until_ready(sol(*vals)[0])           # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = sol(*vals)
+        jax.block_until_ready(out[0])
+        decode_us[t_len] = (time.perf_counter() - t0) / iters * 1e6
+    for t_len in lengths:
+        ratio = decode_us[t_len] / decode_us[lengths[0]]
+        rows.append((f"decode_step_cache{t_len}", decode_us[t_len],
+                     f"x{ratio:.2f}_vs_cache{lengths[0]}"))
+    for t_len in lengths:
+        sol = optimize(model, (1, t_len, cfg.d_model), backend=backend)
+        x = jnp.asarray(rng.standard_normal((1, t_len, cfg.d_model)),
+                        jnp.float32)
+        jax.block_until_ready(sol(x))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = sol(x)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append((f"reforward_step_T{t_len}", us,
+                     f"x{us / decode_us[t_len]:.2f}_vs_decode_step"))
+    return rows
+
+
 def decode_bench(archs=("qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b"),
                  batch: int = 2, steps: int = 8
                  ) -> List[Tuple[str, float, str]]:
@@ -97,4 +215,5 @@ def decode_bench(archs=("qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b"),
 
 
 def csv_rows() -> List[Tuple[str, float, str]]:
-    return serve_rows("xla") + decode_bench()
+    return (serve_rows("xla") + decode_vs_reforward("xla")
+            + decode_flatness("xla") + decode_bench())

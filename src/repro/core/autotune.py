@@ -133,8 +133,17 @@ def pad_shape(shape: Sequence[int]) -> Tuple[int, ...]:
 
 def node_shape(node) -> Optional[Tuple[int, ...]]:
     """The shape a node is keyed under.  LINEAR/MATMUL → (M, K, N) with
-    leading batch dims folded into M; everything else → the output shape."""
+    leading batch dims folded into M; DECODE_ATTENTION → (B, S, H, hd) from
+    the KV-cache operand, so each decode cache bucket gets its own timings
+    (the output shape is (B, 1, H, hd) for *every* cache length and would
+    alias all buckets); everything else → the output shape."""
     from .ir import OpKind
+    if node.op is OpKind.DECODE_ATTENTION:
+        if len(node.inputs) < 2 or len(node.spec.shape) != 4:
+            return tuple(node.spec.shape) or None
+        b, _one, h, hd = node.spec.shape
+        s = node.inputs[1].spec.shape[1]          # k_cache is (B, S, KV, hd)
+        return (b, s, h, hd)
     if node.op in (OpKind.LINEAR, OpKind.MATMUL):
         xs = node.inputs[0].spec.shape if node.inputs else ()
         if not xs or not node.spec.shape:

@@ -93,6 +93,7 @@ class OpKind(enum.Enum):
     CONV2D = "conv2d"
     MATMUL = "matmul"
     ATTENTION = "attention"       # (q, k, v) scaled-dot-product attention
+    DECODE_ATTENTION = "decode_attention"  # 1 query vs a paged KV cache
     RGLRU_SCAN = "rglru_scan"     # gated linear recurrence h_t = a·h + b
     RWKV6_SCAN = "rwkv6_scan"     # RWKV6 WKV recurrence
     # DFP-module ops (memory-bound → fused depth-first code)
@@ -145,7 +146,8 @@ DFP_FUSABLE = {
 
 # Graph-level sequence kernels: never DFP-fused, always elected as whole
 # nodes through the dispatch table (attention + linear-recurrence scans).
-SEQUENCE_OPS = {OpKind.ATTENTION, OpKind.RGLRU_SCAN, OpKind.RWKV6_SCAN}
+SEQUENCE_OPS = {OpKind.ATTENTION, OpKind.DECODE_ATTENTION,
+                OpKind.RGLRU_SCAN, OpKind.RWKV6_SCAN}
 
 # Source nodes carry no inputs; everything else must have at least one.
 SOURCE_OPS = {OpKind.INPUT, OpKind.PARAM, OpKind.CONST}

@@ -301,6 +301,16 @@ def _node_cost_terms(n: Node) -> Tuple[float, float, float]:
         flops = 4.0 * b * h * s * s * hd
         score_bytes = 2.0 * b * h * s * s * 4.0
         return flops, streamed, streamed + score_bytes
+    if n.op is OpKind.DECODE_ATTENTION:
+        # one query row vs an S-row KV cache: 4·B·H·(S+1)·hd FLOPs; the cache
+        # read dominates the streamed bytes, so decode is memory-bound and
+        # O(S) in the cache length — never O(S²) like a full re-forward.  A
+        # roundtrip impl additionally writes+reads the f32 (B, H, S) scores.
+        b, _one, h, hd = n.spec.shape
+        s = n.inputs[1].spec.shape[1] if len(n.inputs) > 1 else 1
+        flops = 4.0 * b * h * (s + 1) * hd
+        score_bytes = 2.0 * b * h * s * 4.0
+        return flops, streamed, streamed + score_bytes
     if n.op is OpKind.RGLRU_SCAN:
         # h_t = a·h + b: ~2 FLOPs/element; streamed bytes dominate either way
         return 2.0 * n.spec.size, streamed, streamed

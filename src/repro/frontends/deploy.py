@@ -42,10 +42,14 @@ from .optimize import SolModel
 MANIFEST_SCHEMA = 2
 
 
-def deploy(sol_model: SolModel, input_shape: Tuple[int, ...],
+def deploy(sol_model: SolModel,
+           input_shape: Optional[Tuple[int, ...]] = None,
            dtype=jnp.float32) -> bytes:
     """Serialize (weights + compiled graph + election metadata) into a
-    single artifact."""
+    single artifact.  With ``input_shape=None`` the input specs (shapes AND
+    dtypes, e.g. the decode program's int32 ``lens``) are derived from the
+    graph's input nodes — required for multi-input graphs like the serving
+    decode program."""
     g = sol_model.graph
     elections = {
         "elections": dict(getattr(g, "elections", {})),
@@ -56,20 +60,25 @@ def deploy(sol_model: SolModel, input_shape: Tuple[int, ...],
         "pinned": {k: [list(c) for c in v] for k, v in
                    getattr(g, "election_pinned", {}).items()},
     }
+    if input_shape is not None:
+        x_specs = [jax.ShapeDtypeStruct(tuple(input_shape), dtype)]
+    else:
+        x_specs = [jax.ShapeDtypeStruct(tuple(i.spec.shape),
+                                        jnp.dtype(i.spec.dtype))
+                   for i in g.inputs]
     return export_fn(sol_model._fn, sol_model._params_for_call(),
-                     jax.ShapeDtypeStruct(tuple(input_shape), dtype),
-                     elections=elections)
+                     *x_specs, elections=elections)
 
 
-def export_fn(fn, params, x_spec: jax.ShapeDtypeStruct, *,
+def export_fn(fn, params, *x_specs: jax.ShapeDtypeStruct,
               elections: Optional[Dict[str, Any]] = None) -> bytes:
-    """Export ``fn(params, x)`` plus ``params`` — any (possibly nested) dict
-    pytree of arrays — into the artifact format.  ``deploy`` is the SolModel
-    front door; this is the general entry point."""
+    """Export ``fn(params, *xs)`` plus ``params`` — any (possibly nested)
+    dict pytree of arrays — into the artifact format.  ``deploy`` is the
+    SolModel front door; this is the general entry point."""
     p_spec = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype),
         params)
-    exp = jexport.export(jax.jit(fn))(p_spec, x_spec)
+    exp = jexport.export(jax.jit(fn))(p_spec, *x_specs)
 
     leaves: List[np.ndarray] = []
     tree = _tree_spec(params, leaves)
@@ -138,8 +147,8 @@ class DeployedModel:
         self._elections = manifest.get("elections") or {}
         self._call = exp.call
 
-    def __call__(self, x) -> Any:
-        return self._call(self.params, x)
+    def __call__(self, *xs) -> Any:
+        return self._call(self.params, *xs)
 
     # -- election metadata (mirrors SolModel.impl_report) -------------------
     def impl_report(self, by_kind: bool = False,

@@ -42,6 +42,18 @@ EmitterFn = Callable[[nn.Module, "EmitContext", Node, str], Node]
 
 _EMITTERS: Dict[Type[nn.Module], EmitterFn] = {}
 
+# decode-mode overrides: modules whose forward emitter is sequence-dependent
+# but which know how to emit a single-token step against a cache input
+# (MultiHeadAttention → DECODE_ATTENTION).  Looked up before _EMITTERS when
+# ctx.mode == 'decode'.
+_DECODE_EMITTERS: Dict[Type[nn.Module], EmitterFn] = {}
+
+# modules whose forward emitter mixes information across sequence positions
+# (scans, token shifts): without a decode emitter they CANNOT be served
+# incrementally — a per-token re-emit would silently drop history, so decode
+# extraction refuses them loudly instead.
+_SEQUENCE_MODULES: set = set()
+
 
 def register_emitter(*module_types: Type[nn.Module]
                      ) -> Callable[[EmitterFn], EmitterFn]:
@@ -53,6 +65,28 @@ def register_emitter(*module_types: Type[nn.Module]
             _EMITTERS[t] = fn
         return fn
     return deco
+
+
+def register_decode_emitter(*module_types: Type[nn.Module]
+                            ) -> Callable[[EmitterFn], EmitterFn]:
+    """Register a single-token decode emitter: ``x`` is the (B, 1, D) step
+    input, and the emitter may create per-layer cache inputs via
+    ``ctx.kv_input`` and record this step's cache rows via
+    ``ctx.kv_outputs``.  Implies the module is sequence-dependent."""
+    def deco(fn: EmitterFn) -> EmitterFn:
+        for t in module_types:
+            _DECODE_EMITTERS[t] = fn
+            _SEQUENCE_MODULES.add(t)
+        return fn
+    return deco
+
+
+def mark_sequence_module(*module_types: Type[nn.Module]) -> None:
+    """Declare module types position-*dependent* without providing a decode
+    emitter: decode extraction will refuse them instead of silently reusing
+    the (wrong for one-token steps) forward emitter.  Position-wise modules
+    (Linear, LayerNorm, activations, containers) need no declaration."""
+    _SEQUENCE_MODULES.update(module_types)
 
 
 def registered_emitters() -> List[str]:
@@ -69,13 +103,45 @@ def _emitter_for(m: nn.Module) -> EmitterFn | None:
 
 class EmitContext:
     """Per-extraction state: the parameter table plus node builders shared by
-    every emitter."""
+    every emitter.
 
-    def __init__(self, dtype: str = "float32"):
+    ``mode`` selects how sequence layers extract:
+
+    * ``'forward'`` — the training/offline graph (PR 1-4 behaviour);
+    * ``'prefill'`` — same compute, but attention layers additionally record
+      their per-layer (k, v) projections in ``kv_outputs`` so the server can
+      seed each request's KV-cache slot from the prompt forward;
+    * ``'decode'``  — single-token step: attention layers read a cache input
+      (created via :meth:`kv_input`, ragged lengths in :attr:`lens`) and emit
+      ``DECODE_ATTENTION``; sequence-dependent modules without a decode
+      emitter are refused.
+    """
+
+    def __init__(self, dtype: str = "float32", mode: str = "forward",
+                 max_seq: int = 0):
         self.dtype = dtype
+        self.mode = mode
+        self.max_seq = max_seq
         self.params: Dict[str, Node] = {}
+        self.kv_inputs: List[Node] = []    # decode: per-layer cache inputs
+        self.kv_outputs: List[Node] = []   # per-layer (k, v) rows, in layer
+                                           # order, aligned with kv_inputs
+        self.lens: Node | None = None      # decode: (B,) int32 cache lengths
 
     def emit(self, m: nn.Module, x: Node, path: str = "") -> Node:
+        if self.mode == "decode":
+            for t in type(m).__mro__:
+                if t in _DECODE_EMITTERS:
+                    return _DECODE_EMITTERS[t](m, self, x, path)
+            if any(t in _SEQUENCE_MODULES for t in type(m).__mro__):
+                raise UnsupportedModuleError(
+                    f"{type(m).__name__} at "
+                    f"{path.rstrip('.') or '<root>'} mixes information "
+                    f"across sequence positions and has no decode emitter: "
+                    f"its forward emitter would silently drop history in a "
+                    f"single-token step.  Add one with frontends.extract."
+                    f"register_decode_emitter({type(m).__name__}), or serve "
+                    f"this model with decode=False (full re-forward).")
         fn = _emitter_for(m)
         if fn is None:
             raise UnsupportedModuleError(
@@ -85,6 +151,14 @@ class EmitContext:
                 f"Add one with frontends.extract."
                 f"register_emitter({type(m).__name__}).")
         return fn(m, self, x, path)
+
+    def kv_input(self, shape: Tuple[int, ...], name: str) -> Node:
+        """A decode-mode cache input (one per cached tensor per layer); the
+        server binds it to the rows gathered from the request's SlotArena
+        slot, zero-padded up to the cache bucket."""
+        n = ir.input_node(shape, self.dtype, name=name)
+        self.kv_inputs.append(n)
+        return n
 
     def param(self, name: str, arr) -> Node:
         if name in self.params:        # same framework storage → same node
@@ -258,7 +332,46 @@ def _emit_attention(m: nn.MultiHeadAttention, ctx: EmitContext, x: Node,
     att = Node(OpKind.ATTENTION, [q, k, v],
                TensorSpec((b, s, m.n_heads, hd), ctx.dtype),
                attrs={"causal": m.causal, "window": m.window, "cap": m.cap})
+    if ctx.mode == "prefill":       # expose this layer's cache rows so the
+        ctx.kv_outputs += [k, v]    # server can seed the request's KV slot
     o = ctx.reshape(att, (b, s, m.n_heads * hd))
+    return ctx.matmul(o, ctx.param(path + "wo", m._params["wo"]))
+
+
+@register_decode_emitter(nn.MultiHeadAttention)
+def _emit_attention_decode(m: nn.MultiHeadAttention, ctx: EmitContext,
+                           x: Node, path: str) -> Node:
+    """Single-token step: project q/k/v for the one new position, attend the
+    query against this layer's cache input plus the new (k, v) pair via
+    DECODE_ATTENTION, and record the pair in ``kv_outputs`` so the server
+    appends it to the slot's cache at position ``lens[b]``."""
+    if not m.causal:
+        raise UnsupportedModuleError(
+            f"MultiHeadAttention at {path.rstrip('.') or '<root>'} is "
+            f"non-causal: a bidirectional layer cannot be decoded "
+            f"incrementally; serve with decode=False.")
+    b, s, _ = x.spec.shape
+    if s != 1:
+        raise ValueError(f"decode extraction expects a single-token step, "
+                         f"got sequence length {s}")
+    hd = m.head_dim
+    q = ctx.reshape(ctx.matmul(x, ctx.param(path + "wq", m._params["wq"])),
+                    (b, 1, m.n_heads, hd))
+    k_new = ctx.reshape(
+        ctx.matmul(x, ctx.param(path + "wk", m._params["wk"])),
+        (b, 1, m.n_kv_heads, hd))
+    v_new = ctx.reshape(
+        ctx.matmul(x, ctx.param(path + "wv", m._params["wv"])),
+        (b, 1, m.n_kv_heads, hd))
+    cshape = (b, ctx.max_seq, m.n_kv_heads, hd)
+    k_cache = ctx.kv_input(cshape, name=f"{path}k_cache")
+    v_cache = ctx.kv_input(cshape, name=f"{path}v_cache")
+    att = Node(OpKind.DECODE_ATTENTION,
+               [q, k_cache, v_cache, k_new, v_new, ctx.lens],
+               TensorSpec((b, 1, m.n_heads, hd), ctx.dtype),
+               attrs={"window": m.window, "cap": m.cap})
+    ctx.kv_outputs += [k_new, v_new]
+    o = ctx.reshape(att, (b, 1, m.n_heads * hd))
     return ctx.matmul(o, ctx.param(path + "wo", m._params["wo"]))
 
 
@@ -331,8 +444,14 @@ def _emit_rwkv6(m: nn.RWKV6TimeMix, ctx: EmitContext, x: Node,
     return ctx.matmul(ctx.binary(OpKind.MUL, scaled, g), P("wo"))
 
 
+# the recurrent layers have no decode emitter (their state would need its
+# own arena region); declaring them sequence-dependent makes decode
+# extraction refuse them loudly instead of emitting a history-free step.
+mark_sequence_module(nn.RGLRU, nn.RWKV6TimeMix)
+
+
 # ---------------------------------------------------------------------------
-# entry point
+# entry points
 # ---------------------------------------------------------------------------
 
 def extract(model: nn.Module, input_shape: Tuple[int, ...],
@@ -343,5 +462,42 @@ def extract(model: nn.Module, input_shape: Tuple[int, ...],
     ctx = EmitContext(dtype)
     out = ctx.emit(model, x, "")
     g = Graph(inputs=[x], outputs=[out], params=ctx.params)
+    g.validate()
+    return g
+
+
+def extract_prefill(model: nn.Module, input_shape: Tuple[int, ...],
+                    dtype: str = "float32") -> Graph:
+    """The serving prefill program: identical compute to :func:`extract`,
+    but every attention layer's (k, v) projections join the graph outputs —
+    ``outputs = [logits, k_0, v_0, k_1, v_1, ...]`` in layer order — so one
+    prompt forward both produces next-token logits and seeds the request's
+    KV-cache slot."""
+    x = ir.input_node(input_shape, dtype, ir.BSD(), name="input")
+    ctx = EmitContext(dtype, mode="prefill")
+    out = ctx.emit(model, x, "")
+    g = Graph(inputs=[x], outputs=[out] + ctx.kv_outputs, params=ctx.params)
+    g.validate()
+    return g
+
+
+def extract_decode(model: nn.Module, batch: int, max_seq: int,
+                   d_model: int, dtype: str = "float32") -> Graph:
+    """The serving decode program: one token per resident sequence.
+
+    ``inputs  = [x (B, 1, D), lens (B,) int32, k_cache_0, v_cache_0, ...]``
+    ``outputs = [logits (B, 1, V), k_new_0, v_new_0, ...]``
+
+    Cache inputs are (B, max_seq, KV, hd) with rows ``[0, lens[b])`` valid;
+    the new (k, v) outputs are the rows the server appends at position
+    ``lens[b]`` after the step.  Sequence-dependent modules without a decode
+    emitter raise :class:`UnsupportedModuleError`."""
+    x = ir.input_node((batch, 1, d_model), dtype, ir.BSD(), name="step")
+    lens = ir.input_node((batch,), "int32", name="lens")
+    ctx = EmitContext(dtype, mode="decode", max_seq=max_seq)
+    ctx.lens = lens
+    out = ctx.emit(model, x, "")
+    g = Graph(inputs=[x, lens] + ctx.kv_inputs,
+              outputs=[out] + ctx.kv_outputs, params=ctx.params)
     g.validate()
     return g

@@ -75,8 +75,10 @@ class Module:
     def eval(self) -> "Module":
         return self.train(False)
 
-    def __call__(self, x: Array) -> Array:
-        return self.forward(x)
+    def __call__(self, *xs: Array) -> Array:
+        # variadic pass-through: SolModel's serving programs (prefill/decode)
+        # take multiple inputs; plain layers keep their single-x forward
+        return self.forward(*xs)
 
     def forward(self, x: Array) -> Array:    # pragma: no cover - abstract
         raise NotImplementedError

@@ -55,10 +55,12 @@ class SolModel(nn.Module):
     def state_dict(self) -> Dict[str, Any]:
         return self._source.state_dict()
 
-    def forward(self, x) -> Any:
+    def forward(self, *xs) -> Any:
         params = self._params_for_call()
-        x = device_api.stage_input(x)
-        y = self._fn(params, x)
+        staged = [device_api.stage_input(x) for x in xs]
+        y = self._fn(params, *staged)
+        if isinstance(y, tuple):     # multi-output graphs (serving prefill/
+            return tuple(device_api.fetch_output(o) for o in y)  # decode)
         return device_api.fetch_output(y)
 
     def stats(self) -> Dict[str, int]:
@@ -134,8 +136,17 @@ def optimize(model: nn.Module, input_shape: Tuple[int, ...], *,
              backend: str | Backend = "xla", training: bool = False,
              dtype: str = "float32") -> SolModel:
     """Extract → optimize → codegen → inject.  ≤1 line for the user."""
-    bk = backend if isinstance(backend, Backend) else get_backend(backend)
     graph = extract(model, input_shape, dtype)
+    return compile_graph(model, graph, backend, training=training)
+
+
+def compile_graph(model: nn.Module, graph, backend: str | Backend = "xla",
+                  *, training: bool = False) -> SolModel:
+    """Optimize → codegen → inject for a pre-built graph (the serving
+    prefill/decode programs come from ``extract_prefill``/``extract_decode``
+    rather than the plain ``extract``); the same pipeline and lowering as
+    :func:`optimize`."""
+    bk = backend if isinstance(backend, Backend) else get_backend(backend)
     graph = passes.run_pipeline(graph, bk, training=training)
     raw_fn = lower_graph(graph, bk)
     fn = jax.jit(raw_fn)

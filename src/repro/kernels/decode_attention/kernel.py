@@ -1,0 +1,133 @@
+"""Single-token decode attention (TPU Pallas): one query row per sequence
+against that sequence's KV cache — the O(1)-per-token half of the served
+prefill/decode split (``distributed/steps.py:make_serve_steps`` is the SPMD
+ancestor of the same shape).
+
+Grid: (batch, q_head).  The kv-head index is derived from the q-head index
+(GQA: h // group).  The whole cache for one (batch, kv head) lives in VMEM
+(S·hd·4 B — a few hundred KiB at serving cache buckets) and the kernel
+streams it in ``bk``-row blocks with an online-softmax carry, exactly like
+the prefill flash kernel but with a single query row.  The per-row cache
+length arrives as a scalar block: the kv loop's upper bound is
+``ceil(len/bk)``, so a short resident sequence reads only its own rows —
+per-step work is proportional to the *actual* cache length, never to the
+bucket.  The step's freshly projected (k_new, v_new) pair — position
+``len``, computed in the same forward — is folded into the softmax after
+the loop, resolving the same-layer chicken-and-egg without a cache write
+inside the kernel.
+
+BlockSpecs:
+  lens: (1, 1)          index (b, h) -> (b, 0)
+  q:    (1, 1, hd)      index (b, h) -> (b, h, 0)
+  k/v:  (1, 1, S, hd)   index (b, h) -> (b, h // group, 0, 0)
+  k_new/v_new: (1, 1, hd) index (b, h) -> (b, h // group, 0)
+  o:    (1, 1, hd)      index (b, h) -> (b, h, 0)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._util import round_up as _round_up
+
+DEFAULT_BK = 512
+NEG = -1e30
+
+
+def _kernel(bk: int, window: int, cap: float, scale: float,
+            lens_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref):
+    s = k_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale                 # (1, hd)
+    length = lens_ref[0, 0]                                  # valid cache rows
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = k_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        vb = v_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (1, bk)
+        if cap:
+            logits = jnp.tanh(logits / cap) * cap
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos < length          # ragged tail + bucket padding rows
+        if window:                     # query position is `length`
+            mask &= (length - k_pos) < window
+        logits = jnp.where(mask, logits, NEG)
+        m_new = jnp.maximum(m, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    hd = q_ref.shape[2]
+    init = (jnp.full((1,), -jnp.inf, jnp.float32),
+            jnp.zeros((1,), jnp.float32),
+            jnp.zeros((1, hd), jnp.float32))
+    hi = jnp.minimum(s // bk, pl.cdiv(length, bk))
+    lo = jnp.maximum(0, length - window) // bk if window else 0
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, init)
+
+    # fold in the new (k, v) pair at position `length` (distance 0: always
+    # causal-visible and inside any window)
+    kn = kn_ref[0].astype(jnp.float32)                       # (1, hd)
+    vn = vn_ref[0].astype(jnp.float32)
+    logit_n = (q * kn).sum(axis=1)                           # (1,)
+    if cap:
+        logit_n = jnp.tanh(logit_n / cap) * cap
+    m_fin = jnp.maximum(m, logit_n)
+    corr = jnp.exp(m - m_fin)
+    p_n = jnp.exp(logit_n - m_fin)
+    l_fin = l * corr + p_n
+    acc_fin = acc * corr[:, None] + p_n[:, None] * vn
+    o = acc_fin / jnp.maximum(l_fin, 1e-30)[:, None]
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def decode_attention_call(q: jax.Array, k: jax.Array, v: jax.Array,
+                          k_new: jax.Array, v_new: jax.Array,
+                          lens: jax.Array, *, window: int = 0,
+                          cap: float = 0.0, bk: int = DEFAULT_BK,
+                          interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, KV, S, hd); k_new, v_new: (B, KV, hd);
+    lens: (B,) int32.  Returns (B, H, hd).
+
+    The cache is zero-padded along S up to the block grid; padded rows are
+    masked inside the kernel (``k_pos < lens[b]``), so any garbage beyond a
+    row's valid length — bucket padding included — contributes nothing.
+    """
+    b, h, hd = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    group = h // kv
+    bk = min(bk, _round_up(s, 8))
+    sp = _round_up(s, bk)
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    lens2 = lens.astype(jnp.int32).reshape(b, 1)
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_kernel, bk, window, cap, scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_: (b_, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b_, h_: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, sp, hd),
+                         lambda b_, h_, g=group: (b_, h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, sp, hd),
+                         lambda b_, h_, g=group: (b_, h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b_, h_, g=group: (b_, h_ // g, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b_, h_, g=group: (b_, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b_, h_: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(lens2, q, k, v, k_new, v_new)

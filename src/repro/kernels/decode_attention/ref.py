@@ -1,0 +1,46 @@
+"""Pure-jnp oracle: one query token against a ragged KV cache.
+
+Row ``b`` of the batch holds a cache of ``lens[b]`` valid rows (positions
+``0 .. lens[b]-1``) plus the current step's freshly projected key/value pair
+at position ``lens[b]`` — the query's own position.  The oracle attends the
+single query over the valid cache rows and the new pair; padded cache rows
+(``p >= lens[b]``) contribute nothing.  This is exactly one row of the
+causal ``flash_attention_ref`` at position ``lens[b]``, which is what the
+conformance matrix and the serving parity tests pin the kernel to.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_new: jax.Array, v_new: jax.Array,
+                         lens: jax.Array, *, window: int = 0,
+                         cap: float = 0.0) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, KV, S, hd); k_new, v_new: (B, KV, hd);
+    lens: (B,) int32 → (B, H, hd)."""
+    b, h, hd = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k.astype(jnp.float32)) * scale
+    logit_new = jnp.einsum("bkgd,bkd->bkg", qg,
+                           k_new.astype(jnp.float32)) * scale
+    if cap:
+        logits = jnp.tanh(logits / cap) * cap
+        logit_new = jnp.tanh(logit_new / cap) * cap
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lens[:, None]                  # valid cache rows
+    if window:  # query sits at position lens[b]; the new pair is distance 0
+        mask &= (lens[:, None] - pos[None, :]) < window
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    all_logits = jnp.concatenate([logits, logit_new[..., None]], axis=-1)
+    w = jax.nn.softmax(all_logits, axis=-1)
+    o = (jnp.einsum("bkgs,bksd->bkgd", w[..., :s], v.astype(jnp.float32))
+         + jnp.einsum("bkg,bkd->bkgd", w[..., s], v_new.astype(jnp.float32)))
+    return o.reshape(b, h, hd).astype(q.dtype)

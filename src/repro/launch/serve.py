@@ -1,4 +1,6 @@
-"""SOL serving subsystem: continuous batching ON the elected/tuned graph.
+"""SOL serving subsystem: continuous batching ON the elected/tuned graph,
+with the forward split into a prefill program and an O(1)-per-token
+incremental decode program.
 
 The runtime chapter (paper Sec. IV-C) under real traffic: earlier drivers
 served ``models/backbone.py`` directly, bypassing everything the middleware
@@ -8,32 +10,60 @@ server routes every forward through ``frontends/optimize.SolModel`` (or a
 the impls that serve traffic are exactly the impls the conformance matrix
 validates and the autotune cache elected.
 
+Two serving programs (``ServeConfig.decode=True``, the default):
+
+* **prefill** (``frontends.extract.extract_prefill``) — one forward over
+  the whole prompt; every attention layer's (k, v) projections join the
+  graph outputs so the same forward that produces the first token also
+  seeds the request's KV-cache slot.
+* **decode** (``frontends.extract.extract_decode``) — one token per
+  resident request against the cached keys/values through the
+  ``DECODE_ATTENTION`` op: inputs are the last token's embedding
+  ``(B, 1, D)``, the per-request cache lengths ``(B,) int32`` and the
+  gathered cache tensors ``(B, cache_bucket, KV, hd)``; outputs are
+  next-token logits plus the new (k, v) rows the scheduler appends at
+  position ``lens[b]``.  Per decoded token the work is O(cache) instead of
+  the O(T·T) full re-forward — the decode program's cost does not grow
+  with how much of the sequence was already generated.
+
+``ServeConfig(decode=False)`` keeps the full-re-forward scheduler of the
+previous revision — every step re-runs the whole resident context — as a
+measured baseline (``benchmarks/serving.py`` reports both).
+
 Pieces, and which paper mechanism each reproduces:
 
-* :class:`SlotArena` — per-request KV-cache slots in an
-  ``AsyncQueue``-backed arena: admission ``malloc_async``s a slot-sized
-  virtual allocation, the prompt lands via ``memcpy_async``, each decoded
-  token is appended with virtual-pointer arithmetic (``ptr + len·4``), and
-  eviction is an async free.  Admission blocks when no slot is free;
-  eviction on completion frees the slot for the next pending request —
-  that interleaving is what lets prefill and decode share the machine.
-* **Bucket padding aligned with the autotune cache** — batches are padded
-  to ``core.autotune.ceil_pow2`` buckets per dim.  A power of two is its
-  own cache bucket, so every served shape hits the measured-timing entries
-  and pinned ``Tunable`` configs exactly, never the roofline fallback.
-* **Packed staging** — each step's embedded rows go host→device as ONE DMA
-  via ``runtime.packed.stage_batch`` (the VEO-udma gather policy).
+* :class:`SlotArena` — per-request slots in an ``AsyncQueue``-backed
+  arena: admission ``malloc_async``s the token region AND one KV region
+  per cached tensor, prompt/token writes land via ``memcpy_async``, cache
+  rows are appended with virtual-pointer arithmetic
+  (``ptr + row·row_bytes``), and eviction is an async free of both
+  regions.  Admission blocks when no slot is free — that interleaving is
+  what lets prefill and decode share the machine.
+* **Bucket padding aligned with the autotune cache** — prefill batches pad
+  to ``(batch, seq)`` pow2 buckets; decode batches pad to
+  ``(batch, cache_len)`` pow2 buckets.  A power of two is its own cache
+  bucket, so every served shape (including every ``DECODE_ATTENTION``
+  cache bucket) hits the measured-timing entries and pinned ``Tunable``
+  configs exactly, never the roofline fallback.
+* **Packed staging** — each prefill forward's embedded rows go
+  host→device as ONE DMA via ``runtime.packed.stage_batch``; each decode
+  forward's mixed inputs (token rows, int32 lengths, KV caches) go as ONE
+  DMA via ``runtime.packed.stage_inputs`` (the VEO-udma gather policy).
 * **Continuous batching** — the scheduler serves the least-recently-served
-  ``max_batch`` residents each step (starvation-free round-robin); newly
-  admitted requests prefill in the same forward that decodes older ones
-  (causal models make prefill and decode the same padded forward here, so
-  the batch mixes phases freely).
+  ``max_batch`` residents each step (starvation-free round-robin), then
+  partitions them: freshly admitted requests run the prefill program,
+  residents run the decode program, in the same tick.
+* **Sampling** — logits→token is a host-side policy per request
+  (:class:`SamplingParams`: greedy / temperature / top-k / top-p with a
+  per-request seed).  Sampling is deterministic given the seed, so a
+  deployed-artifact replay reproduces a live run token-for-token.
 * **Provenance enforcement** — with ``strict_provenance`` every
-  LINEAR/MATMUL/ATTENTION dispatch must have been elected from autotune
-  measurements (``SolModel.check_provenance``); a cold cache raises
-  :class:`ProvenanceError` instead of silently serving roofline guesses.
-  ``warm_autotune`` measures every admissible impl (sweeping declared
-  ``Tunable`` spaces) for every bucket the workload can produce.
+  LINEAR/MATMUL/ATTENTION/DECODE_ATTENTION dispatch must have been
+  elected from autotune measurements (``SolModel.check_provenance``); a
+  cold cache raises :class:`ProvenanceError` instead of silently serving
+  roofline guesses.  ``warm_autotune`` measures every admissible impl
+  (sweeping declared ``Tunable`` spaces) for every prefill AND decode
+  bucket the workload can produce.
 
 Smoke run (what CI executes):
 
@@ -47,7 +77,7 @@ import json
 import sys
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,19 +87,86 @@ from ..core import autotune as AT
 from ..core import measure, passes
 from ..core.ir import OpKind
 from ..frontends import nn
-from ..frontends.extract import extract
-from ..frontends.optimize import SolModel, optimize, provenance_violations
+from ..frontends.extract import extract, extract_decode, extract_prefill
+from ..frontends.optimize import (SolModel, compile_graph, optimize,
+                                  provenance_violations)
 from ..runtime import packed
 from ..runtime.async_queue import AsyncQueue
 
 TOKEN_BYTES = 4                    # int32 tokens in the slot arena
+KV_BYTES = 4                       # float32 cache rows in the slot arena
 MIN_SEQ_BUCKET = 8                 # smallest padded sequence bucket
-SERVED_KINDS = (OpKind.LINEAR, OpKind.MATMUL, OpKind.ATTENTION)
+SERVED_KINDS = (OpKind.LINEAR, OpKind.MATMUL, OpKind.ATTENTION,
+                OpKind.DECODE_ATTENTION)
 
 
 class ProvenanceError(RuntimeError):
     """A bucket model would serve elections that did not come from autotune
     measurements — the silent-roofline-fallback the smoke run must catch."""
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request token-sampling policy.
+
+    ``temperature <= 0`` is greedy argmax (the default) and consumes no
+    randomness.  Otherwise logits are divided by ``temperature``, truncated
+    to the ``top_k`` highest (0 = no truncation) and then to the smallest
+    set whose probability mass reaches ``top_p``, renormalized, and sampled
+    with the request's own ``numpy`` generator seeded from ``seed`` — so a
+    given (logits stream, params) pair always produces the same tokens,
+    live or from a deployed artifact."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature {self.temperature} must be >= 0")
+        if self.top_k < 0:
+            raise ValueError(f"top_k {self.top_k} must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p {self.top_p} must be in (0, 1]")
+
+
+def _softmax(z: np.ndarray) -> np.ndarray:
+    z = z - np.max(z)
+    e = np.exp(z)
+    return e / e.sum()
+
+
+def sample_token(logits: np.ndarray,
+                 params: Optional[SamplingParams] = None,
+                 rng: Optional[np.random.Generator] = None) -> int:
+    """Host-side logits→token step.  Float64 throughout so the sampled
+    distribution is a pure function of the logits bits — the determinism
+    the deploy round-trip asserts."""
+    logits = np.asarray(logits, np.float64).reshape(-1)
+    if params is None or params.temperature <= 0.0:
+        return int(np.argmax(logits))
+    z = logits / params.temperature
+    if params.top_k:
+        k = min(params.top_k, z.size)
+        kth = np.partition(z, -k)[-k]
+        z = np.where(z < kth, -np.inf, z)
+    p = _softmax(z)
+    if params.top_p < 1.0:
+        order = np.argsort(-z, kind="stable")
+        csum = np.cumsum(p[order])
+        keep = order[: min(z.size, int(np.searchsorted(csum, params.top_p))
+                           + 1)]
+        masked = np.full_like(z, -np.inf)
+        masked[keep] = z[keep]
+        p = _softmax(masked)
+    if rng is None:
+        raise ValueError("temperature sampling needs the request's rng")
+    return int(rng.choice(p.size, p=p))
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +177,9 @@ class ProvenanceError(RuntimeError):
 class ServeConfig:
     """Shape of the served LM + scheduler limits.  ``max_seq`` must be a
     power of two so the largest sequence bucket is exactly the context
-    bound."""
+    bound.  ``decode=True`` serves residents through the incremental
+    single-token decode program; ``decode=False`` keeps the full
+    re-forward scheduler as a baseline."""
 
     d_model: int = 64
     n_heads: int = 4
@@ -91,6 +190,7 @@ class ServeConfig:
     slots: int = 8                 # KV-slot arena size (resident requests)
     backend: str = "xla"
     seed: int = 0
+    decode: bool = True            # incremental KV-cache decode program
 
     def __post_init__(self):
         if self.max_seq != AT.ceil_pow2(self.max_seq):
@@ -112,7 +212,8 @@ def build_lm(cfg: ServeConfig) -> nn.Sequential:
 def embedding_table(cfg: ServeConfig) -> np.ndarray:
     """Deterministic host-side token embedding.  Token→vector lookup is a
     host gather (the SOL IR starts at dense tensors); everything after it —
-    every LINEAR/MATMUL/ATTENTION — runs through the elected graph."""
+    every LINEAR/MATMUL/ATTENTION/DECODE_ATTENTION — runs through the
+    elected graph."""
     rng = np.random.default_rng(cfg.seed)
     return (rng.standard_normal((cfg.vocab, cfg.d_model)) * 0.25
             ).astype(np.float32)
@@ -128,6 +229,9 @@ class Request:
     prompt: np.ndarray                       # int32 (L,)
     max_new_tokens: int
     submitted: float
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    rng: Optional[np.random.Generator] = None
     slot: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     phase: str = "pending"                   # pending|prefill|decode|done
@@ -145,21 +249,42 @@ class Request:
     def done(self) -> bool:
         return self.phase == "done"
 
+    @property
+    def cache_len(self) -> int:
+        """Rows of the request's KV cache that hold attended positions.
+        Invariant between steps: every token except the newest has been
+        folded into the cache, so ``cache_len == length - 1``."""
+        return self.length - 1
+
 
 class SlotArena:
-    """Per-request KV-cache slots backed by the async queue's virtual
-    allocator (paper Sec. IV-C).  A slot holds the request's materialized
-    token context (`max_seq` int32s); admission/append/evict are all
-    enqueued operations, so the arena exercises the exact machinery the
-    runtime bugfixes harden: snapshot-at-enqueue memcopies, error
-    re-raising at ``synchronize``, loud use-after-free."""
+    """Per-request slots backed by the async queue's virtual allocator
+    (paper Sec. IV-C).  A slot holds the request's materialized token
+    context (``max_seq`` int32s) and — when ``kv_row_shapes`` is given —
+    one KV region per cached tensor (``max_seq`` float32 rows each, all
+    tensors packed into a single allocation with per-tensor offsets).
+    Admission/append/evict are all enqueued operations, so the arena
+    exercises the exact machinery the runtime bugfixes harden:
+    snapshot-at-enqueue memcopies, error re-raising at ``synchronize``,
+    loud use-after-free."""
 
-    def __init__(self, queue: AsyncQueue, n_slots: int, max_seq: int):
+    def __init__(self, queue: AsyncQueue, n_slots: int, max_seq: int,
+                 kv_row_shapes: Optional[Sequence[Tuple[int, ...]]] = None):
         self.queue = queue
         self.max_seq = max_seq
         self._free = list(range(n_slots - 1, -1, -1))
         self._ptr: Dict[int, Any] = {}
         self._len: Dict[int, int] = {}
+        self.kv_row_shapes = [tuple(s) for s in (kv_row_shapes or [])]
+        self._row_bytes = [int(np.prod(s)) * KV_BYTES
+                           for s in self.kv_row_shapes]
+        self._kv_offs: List[int] = []
+        total = 0
+        for rb in self._row_bytes:
+            self._kv_offs.append(total)
+            total += max_seq * rb
+        self._kv_total = total
+        self._kv_ptr: Dict[int, Any] = {}
 
     @property
     def free_slots(self) -> int:
@@ -170,8 +295,9 @@ class SlotArena:
         return len(self._ptr)
 
     def admit(self, tokens: np.ndarray) -> Optional[int]:
-        """Allocate a slot and stage the prompt into it; None when full
-        (the request waits in the pending queue — admission control)."""
+        """Allocate a slot (token region + KV regions) and stage the prompt
+        into it; None when full (the request waits in the pending queue —
+        admission control)."""
         if not self._free:
             return None
         tokens = np.ascontiguousarray(tokens, np.int32)
@@ -183,6 +309,8 @@ class SlotArena:
         self.queue.memcpy_async(ptr, tokens)
         self._ptr[slot] = ptr
         self._len[slot] = len(tokens)
+        if self._kv_total:
+            self._kv_ptr[slot] = self.queue.malloc_async(self._kv_total)
         return slot
 
     def append(self, slot: int, token: int) -> None:
@@ -202,8 +330,36 @@ class SlotArena:
         n = self._len[slot]
         return buf[:n * TOKEN_BYTES].view(np.int32).copy()
 
+    def write_kv_rows(self, slot: int, tensor: int, start_row: int,
+                      rows: np.ndarray) -> None:
+        """Stage cache rows ``[start_row, start_row + n)`` of one cached
+        tensor — prefill seeds ``[0, L)`` in one write, decode appends one
+        row at ``lens[b]`` — all virtual-pointer arithmetic into the slot's
+        single KV allocation."""
+        rows = np.ascontiguousarray(rows, np.float32)
+        n = rows.shape[0]
+        if start_row + n > self.max_seq:
+            raise ValueError(f"KV write [{start_row}, {start_row + n}) "
+                             f"overflows the {self.max_seq}-row slot")
+        rb = self._row_bytes[tensor]
+        self.queue.memcpy_async(
+            self._kv_ptr[slot] + self._kv_offs[tensor] + start_row * rb,
+            rows)
+
+    def kv_rows(self, slot: int, tensor: int, n_rows: int) -> np.ndarray:
+        """The first ``n_rows`` cache rows of one cached tensor, shaped
+        ``(n_rows,) + row_shape``.  Callers must ``synchronize`` first."""
+        buf = self.queue.allocator.resolve(self._kv_ptr[slot])
+        off = self._kv_offs[tensor]
+        rb = self._row_bytes[tensor]
+        return (buf[off: off + n_rows * rb].view(np.float32)
+                .reshape((n_rows,) + self.kv_row_shapes[tensor]).copy())
+
     def evict(self, slot: int) -> None:
         self.queue.free_async(self._ptr.pop(slot))
+        kv = self._kv_ptr.pop(slot, None)
+        if kv is not None:
+            self.queue.free_async(kv)
         del self._len[slot]
         self._free.append(slot)
 
@@ -215,14 +371,16 @@ class SlotArena:
 class SolServer:
     """Continuous-batching server over the SOL pipeline.
 
-    ``deployed`` switches the server to artifact mode: a mapping
-    ``(batch_bucket, seq_bucket) → deploy blob / DeployedModel``; buckets
-    outside the mapping raise instead of silently compiling a parallel
-    live path."""
+    Bucket-model keys are ``(program, batch_bucket, seq_bucket)`` where
+    ``program`` is ``"prefill"`` / ``"decode"`` (or ``"full"`` with
+    ``decode=False``); for decode the seq bucket is the padded CACHE
+    length.  ``deployed`` switches the server to artifact mode: a mapping
+    of those keys to deploy blobs / DeployedModels; buckets outside the
+    mapping raise instead of silently compiling a parallel live path."""
 
     def __init__(self, cfg: Optional[ServeConfig] = None,
                  model: Optional[nn.Module] = None, *,
-                 deployed: Optional[Dict[Tuple[int, int], Any]] = None,
+                 deployed: Optional[Dict[Tuple, Any]] = None,
                  strict_provenance: bool = False,
                  device=None):
         self.cfg = cfg or ServeConfig()
@@ -231,18 +389,29 @@ class SolServer:
         self._device = device
         self.embed = embedding_table(self.cfg)
         self.queue = AsyncQueue()
-        self.arena = SlotArena(self.queue, self.cfg.slots, self.cfg.max_seq)
-        self._models: Dict[Tuple[int, int], Any] = {}
+        self._models: Dict[Tuple, Any] = {}
         self._deploy_only = deployed is not None
-        self.served_elections: Dict[Tuple[int, int], Dict[str, Any]] = {}
+        self.served_elections: Dict[Tuple, Dict[str, Any]] = {}
+        self.model = model if model is not None else (
+            None if self._deploy_only else build_lm(self.cfg))
+        if self.cfg.decode:
+            # the decode program's cache-input specs fix the arena's KV row
+            # shapes; a throwaway minimal extraction (no compile) reads them
+            spec_model = self.model if self.model is not None \
+                else build_lm(self.cfg)
+            g = extract_decode(spec_model, 1, self.cfg.max_seq,
+                               self.cfg.d_model)
+            self._kv_row_shapes = [tuple(n.spec.shape[2:])
+                                   for n in g.inputs[2:]]
+        else:
+            self._kv_row_shapes = []
+        self.arena = SlotArena(self.queue, self.cfg.slots, self.cfg.max_seq,
+                               kv_row_shapes=self._kv_row_shapes)
         if deployed is not None:
             from ..frontends import deploy as D
             for key, art in deployed.items():
                 m = D.load(art, device) if isinstance(art, bytes) else art
                 self._models[tuple(key)] = self._audit(m, tuple(key))
-            self.model = model
-        else:
-            self.model = model if model is not None else build_lm(self.cfg)
         self._pending: "deque[Request]" = deque()
         self._active: List[Request] = []
         self._finished: List[Request] = []
@@ -250,14 +419,14 @@ class SolServer:
         self._step = 0
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
-        self.stats = {"steps": 0, "dmas": 0, "tokens": 0, "prefills": 0,
-                      "decodes": 0, "admitted": 0, "evicted": 0,
-                      "buckets": {}}
+        self.stats = {"steps": 0, "forwards": 0, "dmas": 0, "tokens": 0,
+                      "prefills": 0, "decodes": 0, "admitted": 0,
+                      "evicted": 0, "buckets": {}}
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, prompt: Sequence[int],
-               max_new_tokens: int = 16) -> Request:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               sampling: Optional[SamplingParams] = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -267,17 +436,20 @@ class SolServer:
                              f"{self.cfg.max_seq}")
         if np.any(prompt < 0) or np.any(prompt >= self.cfg.vocab):
             raise ValueError("prompt token out of vocabulary range")
+        sampling = sampling or SamplingParams()
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max(1, int(max_new_tokens)),
-                      submitted=time.perf_counter())
+                      submitted=time.perf_counter(), sampling=sampling,
+                      rng=np.random.default_rng(sampling.seed))
         self._next_rid += 1
         self._pending.append(req)
         return req
 
     def step(self) -> List[int]:
-        """One scheduler tick: admit → select → stage (one DMA) → forward
-        through the elected graph → sample/append/evict.  Returns the rids
-        served this step."""
+        """One scheduler tick: admit → select the LRU batch → run the
+        prefill forward for new admissions and the decode forward for
+        residents (one packed DMA each) → sample/append/evict.  Returns
+        the rids served this step."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         # admission: pending requests claim free KV slots
@@ -297,32 +469,19 @@ class SolServer:
                        )[: self.cfg.max_batch]
         # flush staged slot writes; a failed async op re-raises HERE
         self.queue.synchronize()
-        rows_tok = [self.arena.tokens(r.slot) for r in batch]
-        lens = [len(t) for t in rows_tok]
-        bucket = self._bucket(len(batch), max(lens))
-        bb, sb = bucket
-        rows = []
-        for t in rows_tok:
-            padded = np.zeros(sb, np.int32)
-            padded[: len(t)] = t
-            rows.append(self.embed[padded])            # (sb, d_model) f32
-        for _ in range(bb - len(batch)):
-            rows.append(np.zeros((sb, self.cfg.d_model), np.float32))
-        x = packed.stage_batch(rows, self._device)     # ONE DMA per batch
-        self.stats["dmas"] += 1
-        model = self._model_for(bucket)
-        logits = np.asarray(model(x))                  # (bb, sb, vocab)
         self._step += 1
         self.stats["steps"] += 1
-        key = f"{bb}x{sb}"
-        self.stats["buckets"][key] = self.stats["buckets"].get(key, 0) + 1
+        if self.cfg.decode:
+            results = (self._forward_prefill(
+                           [r for r in batch if r.phase == "prefill"])
+                       + self._forward_decode(
+                           [r for r in batch if r.phase == "decode"]))
+        else:
+            results = self._forward_full(batch)
         now = time.perf_counter()
-        for i, req in enumerate(batch):
-            # copy: a bare slice would pin the whole step's logits tensor
-            # in memory for as long as the request record lives
-            row = logits[i, lens[i] - 1].copy()
+        for req, row in results:
             req.last_logits = row
-            tok = int(np.argmax(row))
+            tok = sample_token(row, req.sampling, req.rng)
             if req.phase == "prefill":
                 req.first_token_time = now
                 req.phase = "decode"
@@ -347,6 +506,102 @@ class SolServer:
         self._t_last = time.perf_counter()
         return [r.rid for r in batch]
 
+    # -- the three forward programs ------------------------------------------
+
+    def _forward_full(self, batch: List[Request]
+                      ) -> List[Tuple[Request, np.ndarray]]:
+        """Baseline scheduler (``decode=False``): every step re-runs the
+        whole resident context through the plain forward graph."""
+        rows_tok = [self.arena.tokens(r.slot) for r in batch]
+        lens = [len(t) for t in rows_tok]
+        bb, sb = self._bucket(len(batch), max(lens))
+        rows = []
+        for t in rows_tok:
+            padded = np.zeros(sb, np.int32)
+            padded[: len(t)] = t
+            rows.append(self.embed[padded])            # (sb, d_model) f32
+        for _ in range(bb - len(batch)):
+            rows.append(np.zeros((sb, self.cfg.d_model), np.float32))
+        x = packed.stage_batch(rows, self._device)     # ONE DMA
+        self.stats["dmas"] += 1
+        self.stats["forwards"] += 1
+        logits = np.asarray(self._model_for(("full", bb, sb))(x))
+        self._bucket_stat(f"{bb}x{sb}")
+        return [(r, logits[i, lens[i] - 1].copy())
+                for i, r in enumerate(batch)]
+
+    def _forward_prefill(self, reqs: List[Request]
+                         ) -> List[Tuple[Request, np.ndarray]]:
+        """Prompt forward through the prefill program: produces the first
+        token's logits AND the (k, v) rows that seed each request's KV
+        slot — rows ``[0, L)`` of every cached tensor, written through the
+        arena's virtual pointers."""
+        if not reqs:
+            return []
+        rows_tok = [self.arena.tokens(r.slot) for r in reqs]
+        lens = [len(t) for t in rows_tok]
+        bb, sb = self._bucket(len(reqs), max(lens))
+        rows = []
+        for t in rows_tok:
+            padded = np.zeros(sb, np.int32)
+            padded[: len(t)] = t
+            rows.append(self.embed[padded])
+        for _ in range(bb - len(reqs)):
+            rows.append(np.zeros((sb, self.cfg.d_model), np.float32))
+        x = packed.stage_batch(rows, self._device)     # ONE DMA
+        self.stats["dmas"] += 1
+        self.stats["forwards"] += 1
+        outs = self._model_for(("prefill", bb, sb))(x)
+        logits = np.asarray(outs[0])                   # (bb, sb, vocab)
+        kv = [np.asarray(o) for o in outs[1:]]         # (bb, sb, KV, hd)
+        results = []
+        for i, r in enumerate(reqs):
+            for t in range(len(kv)):
+                self.arena.write_kv_rows(r.slot, t, 0, kv[t][i, : lens[i]])
+            # copy: a bare slice would pin the whole step's logits tensor
+            # in memory for as long as the request record lives
+            results.append((r, logits[i, lens[i] - 1].copy()))
+        self._bucket_stat(f"{bb}x{sb}")
+        return results
+
+    def _forward_decode(self, reqs: List[Request]
+                        ) -> List[Tuple[Request, np.ndarray]]:
+        """One token per resident request through the decode program:
+        gather each request's cache rows from its arena slot, pad to the
+        (batch, cache) bucket, stage everything as ONE packed DMA, and
+        append the returned (k, v) rows at position ``lens[b]``."""
+        if not reqs:
+            return []
+        lens = [r.cache_len for r in reqs]
+        db, cb = self._bucket(len(reqs), max(lens))
+        x = np.zeros((db, 1, self.cfg.d_model), np.float32)
+        lens_arr = np.zeros((db,), np.int32)
+        caches = [np.zeros((db, cb) + shape, np.float32)
+                  for shape in self._kv_row_shapes]
+        for i, r in enumerate(reqs):
+            x[i, 0] = self.embed[r.generated[-1]]
+            lens_arr[i] = lens[i]
+            for t in range(len(caches)):
+                caches[t][i, : lens[i]] = self.arena.kv_rows(
+                    r.slot, t, lens[i])
+        staged = packed.stage_inputs([x, lens_arr] + caches,
+                                     self._device)    # ONE DMA
+        self.stats["dmas"] += 1
+        self.stats["forwards"] += 1
+        outs = self._model_for(("decode", db, cb))(*staged)
+        logits = np.asarray(outs[0])                   # (db, 1, vocab)
+        results = []
+        for i, r in enumerate(reqs):
+            for t in range(len(caches)):
+                self.arena.write_kv_rows(r.slot, t, lens[i],
+                                         np.asarray(outs[1 + t])[i])
+            results.append((r, logits[i, 0].copy()))
+        self._bucket_stat(f"d{db}x{cb}")
+        return results
+
+    def _bucket_stat(self, key: str) -> None:
+        self.stats["buckets"][key] = self.stats["buckets"].get(key, 0) + 1
+
     def run(self, max_steps: int = 100_000) -> Dict[str, Any]:
         while self._pending or self._active:
             if self._step >= max_steps:
@@ -363,57 +618,107 @@ class SolServer:
     def _bucket(self, n_rows: int, max_len: int) -> Tuple[int, int]:
         """The (batch, seq) pow2 bucket a physical batch is padded to —
         aligned with ``core.autotune`` keying so served shapes hit measured
-        cache entries exactly."""
+        cache entries exactly.  For decode, ``max_len`` is the longest
+        resident CACHE length and the second element is the cache bucket."""
         sb = min(self.cfg.max_seq,
                  max(min(MIN_SEQ_BUCKET, self.cfg.max_seq),
                      AT.ceil_pow2(max_len)))
         return (AT.ceil_pow2(n_rows), sb)
 
-    def bucket_space(self, max_len: Optional[int] = None
-                     ) -> List[Tuple[int, int]]:
-        """Every (batch, seq) bucket the current workload can produce —
-        what ``warm_autotune`` measures ahead of serving."""
-        if max_len is None:
-            reqs = list(self._pending) + self._active
-            if not reqs:
-                raise ValueError("no requests to derive the bucket space "
-                                 "from; pass max_len explicitly")
-            max_len = max(min(self.cfg.max_seq,
-                              len(r.prompt) + r.max_new_tokens)
-                          for r in reqs)
-        smax = min(self.cfg.max_seq, AT.ceil_pow2(max_len))
-        sbs = []
+    def _seq_buckets(self, max_len: int) -> List[int]:
+        smax = min(self.cfg.max_seq,
+                   max(min(MIN_SEQ_BUCKET, self.cfg.max_seq),
+                       AT.ceil_pow2(max_len)))
+        out = []
         s = min(MIN_SEQ_BUCKET, self.cfg.max_seq)
         while s <= smax:
-            sbs.append(s)
+            out.append(s)
             s *= 2
-        bbs = []
+        return out
+
+    def _batch_buckets(self) -> List[int]:
+        out = []
         b = 1
         while b <= AT.ceil_pow2(self.cfg.max_batch):
-            bbs.append(b)
+            out.append(b)
             b *= 2
-        return [(b, s) for b in bbs for s in sbs]
+        return out
 
-    def _model_for(self, bucket: Tuple[int, int]):
-        m = self._models.get(bucket)
+    def _workload_maxima(self, max_len: Optional[int] = None
+                         ) -> Tuple[int, int]:
+        """(longest prompt, longest total context) the current workload can
+        produce — the prefill and decode bucket spaces derive from them."""
+        if max_len is not None:
+            return max_len, max_len
+        reqs = list(self._pending) + self._active
+        if not reqs:
+            raise ValueError("no requests to derive the bucket space "
+                             "from; pass max_len explicitly")
+        prompts = [len(r.prompt) for r in reqs]
+        totals = [min(self.cfg.max_seq, r.length
+                      + (r.max_new_tokens - len(r.generated)))
+                  for r in reqs]
+        return max(prompts), max(totals)
+
+    def bucket_space(self, max_len: Optional[int] = None
+                     ) -> List[Tuple[int, int]]:
+        """Every (batch, seq) bucket the current workload can produce
+        through the full-re-forward program — what ``warm_autotune``
+        measures ahead of serving with ``decode=False``."""
+        _, max_total = self._workload_maxima(max_len)
+        return [(b, s) for b in self._batch_buckets()
+                for s in self._seq_buckets(max_total)]
+
+    def _warm_graphs(self, max_len: Optional[int]) -> Iterator:
+        """Every program graph whose buckets the workload can open: the
+        plain forward per (batch, seq) bucket with ``decode=False``;
+        otherwise the prefill program per (batch, prompt) bucket plus the
+        decode program per (batch, cache) bucket (caches peak one row
+        short of the total context — the newest token is never cached)."""
+        d = self.cfg.d_model
+        if not self.cfg.decode:
+            for bb, sb in self.bucket_space(max_len):
+                yield extract(self.model, (bb, sb, d))
+            return
+        max_prompt, max_total = self._workload_maxima(max_len)
+        for bb in self._batch_buckets():
+            for sb in self._seq_buckets(max_prompt):
+                yield extract_prefill(self.model, (bb, sb, d))
+        for db in self._batch_buckets():
+            for cb in self._seq_buckets(max(1, max_total - 1)):
+                yield extract_decode(self.model, db, cb, d)
+
+    def _model_for(self, key: Tuple):
+        m = self._models.get(key)
         if m is not None:
             return m
         if self._deploy_only:
             raise KeyError(
-                f"bucket {bucket} not among the deployed artifacts "
+                f"bucket {key} not among the deployed artifacts "
                 f"{sorted(self._models)} — deploy-mode serving never "
                 f"falls back to a live compile")
-        bb, sb = bucket
-        sol = optimize(self.model, (bb, sb, self.cfg.d_model),
-                       backend=self.backend)
-        self._models[bucket] = self._audit(sol, bucket)
+        program, b, s = key
+        if program == "full":
+            sol = optimize(self.model, (b, s, self.cfg.d_model),
+                           backend=self.backend)
+        elif program == "prefill":
+            sol = compile_graph(
+                self.model,
+                extract_prefill(self.model, (b, s, self.cfg.d_model)),
+                self.backend)
+        else:
+            sol = compile_graph(
+                self.model,
+                extract_decode(self.model, b, s, self.cfg.d_model),
+                self.backend)
+        self._models[key] = self._audit(sol, key)
         return sol
 
-    def _audit(self, model, bucket: Tuple[int, int]):
+    def _audit(self, model, key: Tuple):
         """Record (and under ``strict_provenance`` enforce) which impls the
         bucket model serves."""
         kinds = tuple(k.value for k in SERVED_KINDS)
-        self.served_elections[bucket] = {
+        self.served_elections[key] = {
             "by_op": {k: dict(v) for k, v in
                       model.impl_report(by_kind=True).items()
                       if k in kinds},
@@ -427,16 +732,16 @@ class SolServer:
                 viol += self._exact_bucket_violations(model)
             if viol:
                 raise ProvenanceError(
-                    f"bucket {bucket} would serve unmeasured elections "
+                    f"bucket {key} would serve unmeasured elections "
                     f"(warm the autotune cache first): {viol}")
         return model
 
     def _exact_bucket_violations(self, model: SolModel) -> List[str]:
         """An election can carry 'measured' provenance via the cache's
         nearest-bucket fallback — timings from a *different* shape.  Strict
-        serving requires every LINEAR/MATMUL/ATTENTION node's EXACT bucket
-        to hold measurements (a late-submitted request that opens a new
-        bucket needs another ``warm_autotune()`` call, which skips
+        serving requires every served-kind node's EXACT bucket to hold
+        measurements (a late-submitted request that opens a new bucket
+        needs another ``warm_autotune()`` call, which skips
         already-measured buckets)."""
         cache = AT.get_cache()
         out = []
@@ -450,26 +755,29 @@ class SolServer:
                            f"nearest-bucket fallback, not this bucket")
         return out
 
-    def export_artifacts(self) -> Dict[Tuple[int, int], bytes]:
+    def export_artifacts(self) -> Dict[Tuple, bytes]:
         """Deploy every live bucket model (Sec. III-C): the returned blobs
-        feed ``SolServer(deployed=...)`` for artifact serving."""
+        feed ``SolServer(deployed=...)`` for artifact serving.  Input specs
+        come from each program's graph, so the multi-input decode program
+        exports the same way the single-input programs do."""
         from ..frontends import deploy as D
         out = {}
-        for (bb, sb), m in self._models.items():
+        for key, m in self._models.items():
             if isinstance(m, SolModel):
-                out[(bb, sb)] = D.deploy(m, (bb, sb, self.cfg.d_model))
+                out[key] = D.deploy(m)
         return out
 
     # -- autotune warmup -----------------------------------------------------
 
     def warm_autotune(self, max_len: Optional[int] = None, *,
                       warmup: int = 1, iters: int = 3) -> Dict[str, int]:
-        """Measure every admissible impl of every LINEAR/MATMUL/ATTENTION
-        node — sweeping declared ``Tunable`` config spaces — for every
-        bucket the workload can produce, and record the timings into the
-        election cache.  After this, bucket compiles elect from
-        measurements ('measured'/'pinned' provenance), exactly like
-        ``benchmarks/autotune.py`` but scoped to the served graph.
+        """Measure every admissible impl of every served-kind node
+        (LINEAR/MATMUL/ATTENTION/DECODE_ATTENTION) — sweeping declared
+        ``Tunable`` config spaces — for every prefill and decode bucket
+        the workload can produce, and record the timings into the election
+        cache.  After this, bucket compiles elect from measurements
+        ('measured'/'pinned' provenance), exactly like
+        ``benchmarks/autotune.py`` but scoped to the served graphs.
 
         Measurements land in the process-wide ``autotune.get_cache()`` —
         the cache the election pass and the strict audit read; install a
@@ -480,8 +788,7 @@ class SolServer:
         cache = AT.get_cache()
         counts = {"nodes": 0, "impls": 0, "skipped": 0}
         seen = set()
-        for bb, sb in self.bucket_space(max_len):
-            g = extract(self.model, (bb, sb, self.cfg.d_model))
+        for g in self._warm_graphs(max_len):
             g = passes.run_pipeline(g, self.backend)
             for node in g.topo():
                 if node.op not in SERVED_KINDS:
@@ -518,10 +825,12 @@ class SolServer:
             return float(np.percentile(xs, q)) if xs else 0.0
 
         return {
+            "mode": "decode" if self.cfg.decode else "reforward",
             "requests": len(done),
             "tokens": self.stats["tokens"],
             "tokens_per_s": self.stats["tokens"] / wall if wall else 0.0,
             "steps": self.stats["steps"],
+            "forwards": self.stats["forwards"],
             "dmas": self.stats["dmas"],
             "prefills": self.stats["prefills"],
             "decodes": self.stats["decodes"],
@@ -536,10 +845,20 @@ def _measure_node(node, backend, cache: AT.AutotuneCache, *,
                   warmup: int, iters: int) -> int:
     """Time every admissible impl of one node (all tunable configs) through
     the shared sweep (``core.measure.sweep_node`` — the same code path as
-    ``benchmarks/autotune.py``) and return how many impls were recorded."""
+    ``benchmarks/autotune.py``) and return how many impls were recorded.
+    Integer inputs (the decode program's ``lens``) get worst-case values:
+    every row attends a full cache, so the recorded timing bounds the
+    served cost."""
     rng = np.random.default_rng(0)
-    vals = [jnp.asarray(rng.standard_normal(i.spec.shape), jnp.float32)
-            for i in node.inputs]
+    vals = []
+    for inp in node.inputs:
+        if inp.spec.dtype.startswith("int"):
+            fill = (node.inputs[1].spec.shape[1]
+                    if node.op is OpKind.DECODE_ATTENTION else 1)
+            vals.append(jnp.full(inp.spec.shape, fill, jnp.int32))
+        else:
+            vals.append(jnp.asarray(rng.standard_normal(inp.spec.shape),
+                                    jnp.float32))
     return len(measure.sweep_node(node, vals, backend, cache,
                                   warmup=warmup, iters=iters))
 
@@ -567,8 +886,9 @@ def _smoke_workload(cfg: ServeConfig, n_requests: int, gen: int,
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny model + strict measured-provenance audit + "
-                         "deploy round-trip; what CI runs")
+                    help="tiny model + strict measured-provenance audit "
+                         "over prefill AND decode buckets + deploy "
+                         "round-trip; what CI runs")
     ap.add_argument("--backend", default="xla")
     ap.add_argument("--d-model", type=int, default=64)
     ap.add_argument("--n-heads", type=int, default=4)
@@ -579,6 +899,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--slots", type=int, default=6)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--no-decode", action="store_true",
+                    help="serve with the full re-forward baseline instead "
+                         "of the incremental decode program")
     ap.add_argument("--json", help="write the serve summary to this path")
     ap.add_argument("--no-deploy-roundtrip", action="store_true",
                     help="skip the artifact round-trip leg of --smoke")
@@ -587,13 +910,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.smoke:
         cfg = ServeConfig(d_model=32, n_heads=2, n_layers=1, vocab=64,
                           max_seq=32, max_batch=4, slots=4,
-                          backend=args.backend)
+                          backend=args.backend, decode=not args.no_decode)
         args.requests, args.gen = min(args.requests, 6), min(args.gen, 6)
     else:
         cfg = ServeConfig(d_model=args.d_model, n_heads=args.n_heads,
                           n_layers=args.layers, vocab=args.vocab,
                           max_seq=args.max_seq, max_batch=args.max_batch,
-                          slots=args.slots, backend=args.backend)
+                          slots=args.slots, backend=args.backend,
+                          decode=not args.no_decode)
 
     server = SolServer(cfg, strict_provenance=True)
     workload = _smoke_workload(cfg, args.requests, args.gen)
@@ -608,10 +932,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           f"{time.perf_counter() - t0:.1f}s")
 
     summary = server.run()
-    print(f"[serve] {summary['requests']} requests, {summary['tokens']} "
-          f"tokens in {summary['steps']} steps "
+    print(f"[serve] mode={summary['mode']}: {summary['requests']} "
+          f"requests, {summary['tokens']} tokens in {summary['steps']} "
+          f"steps / {summary['forwards']} forwards "
           f"({summary['tokens_per_s']:.1f} tok/s, one packed DMA per "
-          f"step: {summary['dmas']})")
+          f"forward: {summary['dmas']})")
     print(f"[serve] latency p50/p99 = {summary['latency_ms']['p50']:.1f}/"
           f"{summary['latency_ms']['p99']:.1f} ms; ttft p50 = "
           f"{summary['ttft_ms']['p50']:.1f} ms; buckets "

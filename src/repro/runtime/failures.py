@@ -6,6 +6,16 @@ different mesh size — the checkpoint layer is mesh-agnostic) and the data
 loader seeks to the restored step (deterministic stateless pipeline).
 Unit-tested in tests/test_fault_tolerance.py; on a real fleet the failure
 signal comes from the coordination service instead of the simulator.
+
+Serving-fleet role (ROADMAP "Sharded-mesh serving, then a serving
+fleet"): ``run_with_restart`` is also the respawn path for serving
+replicas.  When the straggler monitor (``runtime/straggler.py``) or a
+health check evicts a ``launch/serve.SolServer`` replica, the fleet
+front-end restarts it through the same checkpoint-restore machinery —
+the "state" being the model parameters plus the warmed autotune cache,
+so a respawned replica re-enters strict-provenance serving without
+re-measuring its buckets; in-flight requests on the dead replica are
+re-queued by the router, not recovered here.
 """
 from __future__ import annotations
 

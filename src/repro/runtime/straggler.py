@@ -13,6 +13,15 @@ by the trainer):
 Single-process here: the monitor is driven with recorded per-step times in
 tests; on a real fleet the times come from each host's step clock via the
 coordination service.
+
+Serving-fleet role (ROADMAP "Sharded-mesh serving, then a serving
+fleet"): the same monitor is the per-replica health watcher for a fleet
+of ``launch/serve.SolServer`` replicas.  A replica's step time (or
+token latency) feeds ``record_step``; ``rebalance`` maps to draining the
+flagged replica's share of the request router, and ``evict`` maps to
+drain → evict → respawn through the restart path in
+``runtime/failures.py``.  Nothing here assumes training: the signal is
+"one participant is slower than the fleet", whichever loop produces it.
 """
 from __future__ import annotations
 

@@ -33,6 +33,7 @@ TOLERANCE = {
     "linear":     {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "matmul":     {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "attention":  {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
+    "decode_attention": {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "rglru_scan": {"float32": (1e-4, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "rwkv6_scan": {"float32": (1e-4, 1e-5), "bfloat16": (5e-2, 5e-2)},
     "fused":      {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
@@ -78,6 +79,30 @@ def _case_attention(dtype):
                               k.transpose(0, 2, 1, 3),
                               v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
     return node, [q, k, v], ref
+
+
+def _case_decode_attention(dtype):
+    """One query token vs a ragged KV cache; the oracle is pinned to the
+    full causal re-forward path by the cross-check in the family's ref.py
+    (and by tests/test_serving.py's decode-vs-reforward parity)."""
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    b, s, h, kv, hd = 3, 24, 4, 2, 16
+    q = _arr((b, 1, h, hd), dtype)
+    k, v = _arr((b, s, kv, hd), dtype), _arr((b, s, kv, hd), dtype)
+    k_new, v_new = _arr((b, 1, kv, hd), dtype), _arr((b, 1, kv, hd), dtype)
+    lens = jnp.asarray([0, 7, s], jnp.int32)      # empty / ragged / full
+    node = Node(OpKind.DECODE_ATTENTION,
+                [ir.input_node((b, 1, h, hd), dtype),
+                 ir.input_node((b, s, kv, hd), dtype),
+                 ir.input_node((b, s, kv, hd), dtype),
+                 ir.input_node((b, 1, kv, hd), dtype),
+                 ir.input_node((b, 1, kv, hd), dtype),
+                 ir.input_node((b,), "int32")],
+                TensorSpec((b, 1, h, hd), dtype))
+    ref = decode_attention_ref(q[:, 0], k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), k_new[:, 0],
+                               v_new[:, 0], lens)[:, None]
+    return node, [q, k, v, k_new, v_new, lens], ref
 
 
 def _case_rglru_scan(dtype):
@@ -158,6 +183,7 @@ CASES = {
     "linear": _case_linear,
     "matmul": _case_matmul,
     "attention": _case_attention,
+    "decode_attention": _case_decode_attention,
     "rglru_scan": _case_rglru_scan,
     "rwkv6_scan": _case_rwkv6_scan,
     "fused": _case_fused,
@@ -207,7 +233,9 @@ def test_matrix_covers_every_kernel_family():
     R._load_entry_points()
     case_kinds = {
         "linear": OpKind.LINEAR, "matmul": OpKind.MATMUL,
-        "attention": OpKind.ATTENTION, "rglru_scan": OpKind.RGLRU_SCAN,
+        "attention": OpKind.ATTENTION,
+        "decode_attention": OpKind.DECODE_ATTENTION,
+        "rglru_scan": OpKind.RGLRU_SCAN,
         "rwkv6_scan": OpKind.RWKV6_SCAN, "fused": OpKind.FUSED,
         "avgpool": OpKind.AVGPOOL, "conv2d": OpKind.CONV2D,
     }

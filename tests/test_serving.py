@@ -255,14 +255,33 @@ def test_stage_batch_is_one_dma():
         packed.stage_batch([])
 
 
-def test_serving_uses_one_dma_per_step():
+def test_serving_uses_one_dma_per_forward():
+    """Each program dispatch stages its whole input set as one DMA: a step
+    that runs both a prefill and a decode forward issues exactly two."""
     cfg = tiny_cfg(max_seq=16)
     server = SolServer(cfg)
     for i in range(3):
         server.submit([i + 1, 2, 3], max_new_tokens=2)
     packed.reset_transfer_stats()
     summary = server.run()
-    assert summary["dmas"] == summary["steps"]
+    assert summary["dmas"] == summary["forwards"]
+    assert summary["forwards"] >= summary["steps"]
+    assert (packed.TRANSFER_STATS["packed_dmas"]
+            + packed.TRANSFER_STATS["direct_dmas"]) == summary["dmas"]
+    server.close()
+
+
+def test_reforward_baseline_uses_one_dma_per_step():
+    """The decode=False baseline keeps the old invariant: one mixed-phase
+    forward, one packed DMA, per scheduler step."""
+    cfg = tiny_cfg(max_seq=16, decode=False)
+    server = SolServer(cfg)
+    for i in range(3):
+        server.submit([i + 1, 2, 3], max_new_tokens=2)
+    packed.reset_transfer_stats()
+    summary = server.run()
+    assert summary["mode"] == "reforward"
+    assert summary["dmas"] == summary["steps"] == summary["forwards"]
     assert packed.TRANSFER_STATS["packed_dmas"] == summary["steps"]
     server.close()
 
@@ -292,3 +311,173 @@ def test_slot_arena_rejects_oversized_prompt():
         arena.admit(np.arange(5, dtype=np.int32))
     assert arena.free_slots == 1       # nothing leaked
     q.close()
+
+
+# ---------------------------------------------------------------------------
+# incremental decode program (ISSUE 6 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_decode_program_matches_reforward_baseline():
+    """The incremental decode path (prefill seeds the KV slots, then one
+    DECODE_ATTENTION token step per tick) must reproduce the full
+    re-forward baseline token-for-token, and its final-step logits to
+    1e-5 — same workload, same greedy sampling, two schedulers."""
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    from repro.launch.serve import build_lm
+    model = build_lm(tiny_cfg(max_seq=16))     # ONE weight init, two paths
+    runs = {}
+    for decode in (True, False):
+        cfg = tiny_cfg(max_seq=16, decode=decode)
+        server = SolServer(cfg, model)
+        reqs = [server.submit(p, max_new_tokens=4) for p in prompts]
+        server.run()
+        runs[decode] = reqs
+        server.close()
+    for a, b in zip(runs[True], runs[False]):
+        assert a.generated == b.generated, \
+            f"decode path diverged for request {a.rid}"
+        np.testing.assert_allclose(a.last_logits, b.last_logits,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_decode_buckets_and_elections():
+    """Decode steps run through (batch, cache)-bucketed decode programs
+    whose elections include the DECODE_ATTENTION op — the decode forward
+    never silently falls back to the full program."""
+    cfg = tiny_cfg(max_seq=32)
+    server = SolServer(cfg)
+    server.submit([1, 2, 3, 4, 5, 6, 7], max_new_tokens=8)
+    summary = server.run()
+    assert summary["mode"] == "decode"
+    assert any(k.startswith("d") for k in summary["buckets"]), \
+        f"no decode buckets served: {summary['buckets']}"
+    decode_keys = [k for k in server._models if k[0] == "decode"]
+    assert decode_keys
+    for key in decode_keys:
+        by_op = server.served_elections[key]["by_op"]
+        assert "decode_attention" in by_op, \
+            f"decode bucket {key} elected no DECODE_ATTENTION impl"
+    # prefill ran exactly once per request; every other token was O(1)
+    assert summary["prefills"] == 1
+    assert summary["decodes"] == summary["tokens"] - 1
+    server.close()
+
+
+def test_decode_input_size_is_cache_bucket_not_history():
+    """O(1)-per-token structurally: the decode program's input bytes are a
+    function of the CACHE bucket, not of how many steps already ran — the
+    re-forward baseline's per-step bytes instead grow with the context."""
+    cfg = tiny_cfg(max_seq=32)
+    server = SolServer(cfg)
+    server.submit([1, 2, 3], max_new_tokens=12)
+    sizes = []
+    orig = packed.stage_inputs
+
+    def spy(arrays, device=None):
+        sizes.append(sum(a.nbytes for a in arrays))
+        return orig(arrays, device)
+
+    packed.stage_inputs = spy
+    try:
+        server.run()
+    finally:
+        packed.stage_inputs = orig
+    # first token came from prefill; the other 11 are one decode DMA each
+    assert len(sizes) == 11
+    # within one cache bucket the staged bytes are constant
+    assert len(set(sizes[:4])) == 1, sizes      # cache lens 3..6 → cb 8
+    server.close()
+
+
+def test_slot_arena_kv_regions_pointer_append_and_gather():
+    q = AsyncQueue()
+    arena = SlotArena(q, n_slots=2, max_seq=4,
+                      kv_row_shapes=[(2, 3), (2, 3)])
+    s = arena.admit(np.asarray([7], np.int32))
+    rows0 = np.arange(12, dtype=np.float32).reshape(2, 2, 3)
+    arena.write_kv_rows(s, 0, 0, rows0)               # seed rows [0, 2)
+    arena.write_kv_rows(s, 1, 1, rows0[:1] + 100.0)   # append at row 1
+    q.synchronize()
+    np.testing.assert_array_equal(arena.kv_rows(s, 0, 2), rows0)
+    np.testing.assert_array_equal(arena.kv_rows(s, 1, 2)[1],
+                                  rows0[0] + 100.0)
+    with pytest.raises(ValueError, match="overflows"):
+        arena.write_kv_rows(s, 0, 3, rows0)           # rows [3, 5) > max 4
+    arena.evict(s)
+    s2 = arena.admit(np.asarray([1], np.int32))       # regions recycled
+    assert s2 is not None
+    q.synchronize()
+    q.close()
+
+
+# ---------------------------------------------------------------------------
+# sampling determinism (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+def _run_sampling(cfg, model, sampling):
+    server = SolServer(cfg, model)
+    reqs = [server.submit([3, 1, 4, 1], max_new_tokens=5,
+                          sampling=sampling),
+            server.submit([2, 7, 1], max_new_tokens=5, sampling=sampling)]
+    server.run()
+    server.close()
+    return [r.generated for r in reqs]
+
+
+def test_sampling_same_seed_is_identical_across_runs():
+    from repro.launch.serve import SamplingParams, build_lm
+    cfg = tiny_cfg(max_seq=16)
+    model = build_lm(cfg)
+    sp = SamplingParams(temperature=0.8, top_k=8, top_p=0.9, seed=123)
+    assert _run_sampling(cfg, model, sp) == _run_sampling(cfg, model, sp)
+
+
+def test_sampling_live_vs_deployed_identical():
+    """Temperature sampling replayed through deployed artifacts must
+    reproduce the live tokens exactly: same logits bits, same per-request
+    seeded generator."""
+    from repro.launch.serve import SamplingParams
+    cfg = tiny_cfg(max_seq=16)
+    sp = SamplingParams(temperature=0.7, top_p=0.95, seed=42)
+    live = SolServer(cfg)
+    live_reqs = [live.submit([5, 6, 7], max_new_tokens=4, sampling=sp),
+                 live.submit([8, 9], max_new_tokens=4, sampling=sp)]
+    live.run()
+    replay = SolServer(cfg, deployed=live.export_artifacts())
+    rep_reqs = [replay.submit([5, 6, 7], max_new_tokens=4, sampling=sp),
+                replay.submit([8, 9], max_new_tokens=4, sampling=sp)]
+    replay.run()
+    for a, b in zip(live_reqs, rep_reqs):
+        assert a.generated == b.generated
+    live.close()
+    replay.close()
+
+
+def test_sampling_edge_cases_reduce_to_greedy_and_full_mass():
+    from repro.launch.serve import SamplingParams, sample_token
+    rng = np.random.default_rng(0)
+    logits = np.asarray([0.1, 2.5, -1.0, 0.4], np.float32)
+    # top_k=1 keeps only the argmax regardless of temperature
+    sp1 = SamplingParams(temperature=1.3, top_k=1, seed=0)
+    for _ in range(5):
+        assert sample_token(logits, sp1, rng) == int(np.argmax(logits))
+    # top_p=1.0 is plain temperature sampling: same seed → same token
+    spa = SamplingParams(temperature=0.9, top_p=1.0, seed=5)
+    ta = sample_token(logits, spa, np.random.default_rng(5))
+    tb = sample_token(logits, spa, np.random.default_rng(5))
+    assert ta == tb
+    # temperature<=0 is greedy and consumes no randomness
+    assert sample_token(logits, SamplingParams(), None) \
+        == int(np.argmax(logits))
+
+
+def test_sampling_params_validation():
+    from repro.launch.serve import SamplingParams
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)

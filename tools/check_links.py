@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Check relative markdown links (and their #anchors) in the repo docs.
+
+Stdlib-only, run by CI:
+
+    python tools/check_links.py            # README.md + docs/*.md
+    python tools/check_links.py FILE ...   # explicit file list
+
+For every inline link ``[text](target)`` whose target is not an absolute
+URL or a bare in-page anchor, the target path is resolved relative to the
+containing file and must exist; if the target carries a ``#fragment`` and
+points at a markdown file, the fragment must match a heading's GitHub
+anchor slug.  Exit non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — target up to the first unescaped ')'; ignore images the
+# same way as links (the path must exist either way).
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def rel(p: Path) -> str:
+    try:
+        return str(p.relative_to(ROOT))
+    except ValueError:
+        return str(p)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, spaces → dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(md: Path) -> set:
+    anchors = set()
+    seen: dict = {}
+    in_fence = False
+    for line in md.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(
+            md.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            path_part, _, fragment = target.partition("#")
+            if not path_part:                # bare in-page #anchor
+                dest = md
+            else:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{rel(md)}:{lineno}: "
+                                  f"missing target {target}")
+                    continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in heading_anchors(dest):
+                    errors.append(f"{rel(md)}:{lineno}: "
+                                  f"no heading for anchor #{fragment} "
+                                  f"in {rel(dest)}")
+    return errors
+
+
+def main(argv) -> int:
+    files = ([Path(a).resolve() for a in argv]
+             if argv else [ROOT / "README.md", *sorted(ROOT.glob("docs/*.md"))])
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
