@@ -179,6 +179,181 @@ def tune(backend_name: str = "pallas_interpret",
     return rows
 
 
+def refine_plan(cache, backend_name: str, *, top_k: int = 4,
+                rounds: int = 3, budget: int = 32, min_gain: float = 0.05,
+                rewrite_ratio: float = 10.0, warmup: int = 1,
+                iters: int = 3, measure=None) -> List[dict]:
+    """Gap-driven tuning planner (ISSUE tentpole): instead of sweeping every
+    family's full config space uniformly, rank the cache's
+    (op, bucket, backend) cells by SOL gap (``core.sol``) and spend the
+    measurement ``budget`` where the gap is worst.
+
+    For each of the ``top_k`` worst cells whose winning impl declares a
+    ``Tunable``, probe the winner's ``refine_space`` neighborhood —
+    adjacent tile/block sizes, typically OUTSIDE the initially declared
+    space — for up to ``rounds`` rounds, re-centering on each improvement
+    and stopping early when a round fails to close the gap by ``min_gain``
+    (relative).  Improvements are recorded back into ``cache`` (the cache
+    keeps the best time per impl, so a later election pins the refined
+    config).  Cells whose ratio stays above ``rewrite_ratio`` after
+    refinement — or whose impl has nothing to tune — are flagged
+    ``rewrite_candidate``: no config in this family's neighborhood reaches
+    the hardware limit, the kernel itself needs work.
+
+    ``measure(node, vals, backend, impl, configs)`` is injectable for
+    tests; the default measures for real through
+    ``core.measure.measure_impl_configs`` (per-config errors are skipped —
+    probing outside a declared space must never abort the plan).
+
+    Returns one report dict per examined cell."""
+    from repro.backends import get_backend
+    from repro.backends import registry as R
+    from repro.core import sol as SOL
+    from repro.core.measure import measure_impl_configs
+    from repro.core.passes import _node_cost_terms
+
+    backend = get_backend(backend_name)
+    hw = backend.hw
+
+    if measure is None:
+        def measure(node, vals, bk, impl, configs):
+            return measure_impl_configs(node, vals, bk, impl, configs,
+                                        warmup=warmup, iters=iters,
+                                        skip_errors=True)
+
+    cells = [r for r in SOL.rank(SOL.cache_rows(
+        cache, backends=[backend_name], best_only=True)) if r.ratio > 0.0]
+    reports: List[dict] = []
+    for row in cells[:top_k]:
+        rep = {"op": row.op, "bucket": row.bucket, "dtype": row.dtype,
+               "backend": row.backend, "impl": row.impl,
+               "before_us": row.us, "before_ratio": row.ratio,
+               "after_us": row.us, "after_ratio": row.ratio,
+               "bound_us": row.bound_us, "rounds": 0,
+               "configs_measured": 0, "config": row.config,
+               "refined_impl": None, "outside_space": False,
+               "rewrite_candidate": False, "note": ""}
+        reports.append(rep)
+        # the refinement target is the cell's fastest impl that HAS a tuned
+        # config space — usually the elected winner, but when an untunable
+        # reference impl currently wins the cell, expanding the tunable
+        # family's neighborhood is exactly what might flip the election
+        target_impl, target_m = None, None
+        for impl_name, m in cache.lookup(row.op, row.bucket, row.dtype,
+                                         backend_name).items():
+            impl = R.get_impl(impl_name)
+            if impl is None or impl.tunable is None or m.config is None:
+                continue
+            if target_m is None or m.us < target_m.us:
+                target_impl, target_m = impl, m
+        if target_impl is None:
+            rep["note"] = "nothing to refine (no impl with a tuned config)"
+            rep["rewrite_candidate"] = row.ratio > rewrite_ratio
+            continue
+        try:
+            node, vals = _build(row.op, row.bucket)
+        except KeyError:
+            rep["note"] = f"no synthetic builder for op {row.op!r}"
+            rep["rewrite_candidate"] = row.ratio > rewrite_ratio
+            continue
+        rep["refined_impl"] = target_impl.name
+        tun = target_impl.tunable
+        flops, streamed, roundtrip = _node_cost_terms(node)
+        nbytes = roundtrip if target_impl.memory == "roundtrip" else streamed
+        initial_space = set(tun.tune_space(node, hw))
+        seen = initial_space | {tuple(target_m.config)}
+        cur_us, cur_cfg = target_m.us, tuple(target_m.config)
+        for _round in range(rounds):
+            if budget <= 0:
+                rep["note"] = "budget exhausted"
+                break
+            cfgs = [c for c in tun.refine_space(node, hw, cur_cfg)
+                    if c not in seen][:budget]
+            if not cfgs:
+                rep["note"] = rep["note"] or "neighborhood exhausted"
+                break
+            budget -= len(cfgs)
+            seen |= set(cfgs)
+            results = [r for r in measure(node, vals, backend,
+                                          target_impl, cfgs)
+                       if r.error is None]
+            rep["configs_measured"] += len(cfgs)
+            rep["rounds"] += 1
+            if not results:
+                break
+            best = min(results, key=lambda r: r.us)
+            if best.us < cur_us * (1.0 - min_gain):
+                cur_us, cur_cfg = best.us, tuple(best.config)
+                cache.record(row.op, row.bucket, row.dtype, backend_name,
+                             target_impl.name, cur_us, config=cur_cfg,
+                             flops=flops, nbytes=nbytes,
+                             mean_us=best.mean_us)
+            else:
+                break                     # the gap stopped closing
+        rep["config"] = cur_cfg
+        # the cell's post-refinement election: the refined family wins only
+        # if it now beats the previous cell winner
+        rep["after_us"] = min(cur_us, row.us)
+        if cur_us < row.us:
+            rep["impl"] = target_impl.name
+        rep["after_ratio"] = SOL.sol_ratio(rep["after_us"], row.bound_us)
+        rep["outside_space"] = cur_cfg not in initial_space
+        rep["rewrite_candidate"] = rep["after_ratio"] > rewrite_ratio
+    return reports
+
+
+def _plan_row(rep: dict) -> Tuple[str, float, str]:
+    bucket = "x".join(str(d) for d in rep["bucket"])
+    cfg = "x".join(str(d) for d in rep["config"]) if rep["config"] else "-"
+    derived = (f"ratio={rep['before_ratio']:.2f}->{rep['after_ratio']:.2f};"
+               f"cfg={cfg};outside_space={rep['outside_space']};"
+               f"rewrite={rep['rewrite_candidate']};rounds={rep['rounds']};"
+               f"measured={rep['configs_measured']}")
+    if rep["note"]:
+        derived += f";note={rep['note']}"
+    return (f"sol_refine_{rep['backend']}_{rep['op']}_{bucket}",
+            rep["after_us"], derived)
+
+
+def sol_rows(backends: Sequence[str] = ("pallas_interpret", "host_cpu"),
+             ) -> List[Tuple[str, float, str]]:
+    """The ``sol`` benchmark table: tune every Tunable family (tiny
+    shapes), run the gap-driven refinement planner on each backend's worst
+    cells, then rank every elected kernel by measured ÷ roofline-bound.
+    Renders the ranked SOL table to stderr and returns the CSV/JSON rows
+    (``BENCH_sol.json``) — SOL cells first, then one ``sol_refine_*`` row
+    per planner cell recording whether refinement elected a config outside
+    the initially declared ``tune_space``."""
+    from repro.core import sol as SOL
+    from repro.core.autotune import AutotuneCache
+
+    cache = AutotuneCache()
+    for backend in backends:
+        tune(backend, tiny=True, cache=cache)
+    plan_reports = []
+    for backend in backends:
+        plan_reports += refine_plan(cache, backend, top_k=3, rounds=2,
+                                    budget=24, iters=3)
+    ranked = SOL.rank(SOL.cache_rows(cache, best_only=True))
+    print(SOL.render(ranked), file=sys.stderr)
+    rows: List[Tuple[str, float, str]] = []
+    for r in ranked:
+        bucket = "x".join(str(d) for d in r.bucket)
+        cfg = "x".join(str(d) for d in r.config) if r.config else "-"
+        rows.append((f"sol_{r.backend}_{r.op}_{bucket}_{r.impl}", r.us,
+                     f"bound_us={r.bound_us:.3f};ratio={r.ratio:.2f};"
+                     f"bneck={r.bottleneck};conf={r.confidence};"
+                     f"src={r.source};cfg={cfg}"))
+    rows += [_plan_row(rep) for rep in plan_reports]
+    wins = [rep for rep in plan_reports
+            if rep["outside_space"] and rep["after_us"] < rep["before_us"]]
+    print(f"[sol] planner refined {len(wins)} cell(s) to a config outside "
+          f"the declared tune_space; "
+          f"{sum(r['rewrite_candidate'] for r in plan_reports)} rewrite "
+          f"candidate(s)", file=sys.stderr)
+    return rows
+
+
 def matmul_rows() -> List[Tuple[str, float, str]]:
     """The ``matmul`` benchmark table: tiled Pallas MXU matmul (interpret
     mode off-TPU) vs the einsum reference across aligned and ragged shapes,

@@ -8,8 +8,12 @@ results/dryrun.jsonl:
   collective_s = ICI_bytes_per_device / link_bw
 
 with the constants taken from the backend registry's HardwareSpec (the same
-cost model the implementation-election pass in core.passes uses), defaulting
-to the production target (tpu_v5e: 197e12 bf16 / 819e9 / 50e9).
+cost model the implementation-election pass in core.passes uses).  The spec
+is resolved from the ACTIVE backend — ``SOL_BACKEND`` in the environment,
+default ``"xla"`` whose spec is the production target (tpu_v5e: 197e12 bf16
+/ 819e9 / 50e9) — never hardcoded at import time, so SOL ratios and
+roofline rows describe the hardware that actually produced the
+measurements.
 
 dominant term = bottleneck; MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D
 (MoE); usefulness ratio = MODEL_FLOPS / HLO_FLOPs (catches remat and
@@ -18,16 +22,27 @@ redundant compute).
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from repro.backends.registry import TPU_V5E
-
-HW = TPU_V5E
-PEAK_FLOPS = HW.peak_flops_bf16
-HBM_BW = HW.hbm_bandwidth
-ICI_BW = HW.ici_bandwidth
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.jsonl"
+
+DEFAULT_BACKEND = "xla"          # its HardwareSpec is the tpu_v5e target
+
+
+def active_backend_name() -> str:
+    """The backend whose ``HardwareSpec`` the roofline rows describe —
+    ``SOL_BACKEND`` from the environment, else :data:`DEFAULT_BACKEND`."""
+    return os.environ.get("SOL_BACKEND", DEFAULT_BACKEND)
+
+
+def active_hw(backend: Optional[str] = None):
+    """Resolve the active backend's ``HardwareSpec`` through the registry
+    (read per call, not at import, so ``SOL_BACKEND`` set by a test or a
+    driver after import still takes effect)."""
+    from repro.backends import get_backend
+    return get_backend(backend or active_backend_name()).hw
 
 
 def load_cells(path: Path = RESULTS) -> List[dict]:
@@ -60,36 +75,40 @@ def model_flops(arch: str, shape: str, n_devices: int) -> float:
     return 2.0 * n_active * shp.global_batch / n_devices
 
 
-def roofline_row(r: dict) -> Optional[dict]:
+def roofline_row(r: dict, hw=None) -> Optional[dict]:
     if r.get("status") != "ok":
         return None
+    hw = hw if hw is not None else active_hw()
     f = r["flops_per_device"]
     b = r["hbm_bytes_per_device"]
     i = r["ici_bytes_per_device"]
-    terms = {"compute": HW.compute_s(f), "memory": HW.memory_s(b),
-             "collective": HW.collective_s(i)}
+    terms = {"compute": hw.compute_s(f), "memory": hw.memory_s(b),
+             "collective": hw.collective_s(i)}
     dom = max(terms, key=terms.get)
     mf = model_flops(r["arch"], r["shape"], r["n_devices"])
     bound = max(terms.values())
     return {
         "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "hw": hw.name,
         "compute_s": terms["compute"], "memory_s": terms["memory"],
         "collective_s": terms["collective"], "dominant": dom,
         "model_flops_per_device": mf,
         "useful_ratio": mf / f if f else 0.0,
         # roofline fraction: useful-compute time over the bound the program
         # actually hits (1.0 = the chip spends all time on model math)
-        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "roofline_fraction": ((mf / hw.peak_flops_bf16) / bound
+                              if bound else 0.0),
         "temp_bytes": r.get("memory", {}).get("temp_size_in_bytes", 0),
     }
 
 
-def table(mesh: str = "1pod") -> List[dict]:
+def table(mesh: str = "1pod", hw=None) -> List[dict]:
+    hw = hw if hw is not None else active_hw()
     rows = []
     for r in load_cells():
         if r.get("mesh") != mesh:
             continue
-        row = roofline_row(r)
+        row = roofline_row(r, hw)
         if row:
             rows.append(row)
     rows.sort(key=lambda x: (x["arch"], x["shape"]))

@@ -12,15 +12,23 @@ tables).  Prints ``name,us_per_call,derived`` CSV.
               tiles, attention blocks, DFP fusion sizing, scan blocks)
   serving     continuous batching through the SOL server (tokens/s +
               p50/p99 request latency + TTFT, measured elections only)
+  sol         speed-of-light gap analysis: every elected kernel ranked by
+              measured ÷ roofline-bound (with exact/nearest + measured/
+              calibrated provenance), plus the gap-driven refinement
+              planner's per-cell outcomes (configs found outside the
+              declared tune_space, rewrite candidates)
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...] [--json PATH]
+     (also runnable as a plain script: python benchmarks/run.py sol)
 
 ``--json PATH`` additionally writes the rows as a JSON document (the
 ``BENCH_*.json`` series CI uploads as an artifact, so the perf trajectory
-accumulates across commits).  When the ``matmul`` / ``serving`` tables ran,
-stable-named siblings ``BENCH_matmul.json`` / ``BENCH_serve.json`` are
-emitted with just those rows, so each perf trajectory has its own
-data points.
+accumulates across commits).  When the ``matmul`` / ``serving`` / ``sol``
+tables ran, stable-named siblings ``BENCH_matmul.json`` /
+``BENCH_serve.json`` / ``BENCH_sol.json`` are emitted with just those
+rows, so each perf trajectory has its own data points —
+``tools/bench_diff.py`` diffs any two of them and CI fails on a >15%
+regression in any shared row.
 
 Exits non-zero if any requested table raises, so CI can gate on the smoke
 step instead of silently shipping a partial CSV.
@@ -31,6 +39,15 @@ import json
 import os
 import sys
 import traceback
+
+if __package__ in (None, ""):            # plain-script mode: python benchmarks/run.py
+    _here = os.path.dirname(os.path.abspath(__file__))
+    _root = os.path.dirname(_here)
+    for p in (_root, os.path.join(_root, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    import benchmarks                     # noqa: F401  (establish the package)
+    __package__ = "benchmarks"
 
 
 def _table_rows(name: str):
@@ -58,6 +75,9 @@ def _table_rows(name: str):
     if name == "serving":
         from . import serving
         return serving.csv_rows()
+    if name == "sol":
+        from . import autotune
+        return autotune.sol_rows()
     raise KeyError(f"unknown table {name!r}")
 
 
@@ -98,20 +118,23 @@ def main() -> int:
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"[benchmarks] wrote {json_path}", file=sys.stderr)
-        # stable-named side files so each table's perf trajectory has its
-        # own data points across commits
-        for table, fname in (("matmul", "BENCH_matmul.json"),
-                             ("serving", "BENCH_serve.json")):
-            if not per_table.get(table):
-                continue
-            side = os.path.join(os.path.dirname(json_path) or ".", fname)
-            with open(side, "w") as f:
-                json.dump({"tables": [table],
-                           "rows": [{"name": n, "us_per_call": us,
-                                     "derived": d}
-                                    for n, us, d in per_table[table]]},
-                          f, indent=2)
-            print(f"[benchmarks] wrote {side}", file=sys.stderr)
+    # stable-named side files so each table's perf trajectory has its own
+    # data points across commits (written whenever the table ran, --json or
+    # not — tools/bench_diff.py gates CI on these)
+    for table, fname in (("matmul", "BENCH_matmul.json"),
+                         ("serving", "BENCH_serve.json"),
+                         ("sol", "BENCH_sol.json")):
+        if not per_table.get(table):
+            continue
+        out_dir = os.path.dirname(json_path) if json_path else ""
+        side = os.path.join(out_dir or ".", fname)
+        with open(side, "w") as f:
+            json.dump({"tables": [table],
+                       "rows": [{"name": n, "us_per_call": us,
+                                 "derived": d}
+                                for n, us, d in per_table[table]]},
+                      f, indent=2)
+        print(f"[benchmarks] wrote {side}", file=sys.stderr)
     if failed:
         print(f"[benchmarks] failed tables: {', '.join(failed)}",
               file=sys.stderr)

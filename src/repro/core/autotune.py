@@ -83,11 +83,17 @@ class Tunable:
                 one node on one ``HardwareSpec``; may be empty (nothing to
                 sweep for this shape).
     ``bind``  — optional override of the default pin/clear behaviour.
+    ``refine``— optional override of :meth:`refine_space` — the neighborhood
+                the gap-driven planner probes AROUND a winning config, which
+                may step outside the initial ``space`` (families with
+                divisibility constraints override this to stay legal).
     """
 
     attr: str
     space: Callable[[object, object], Sequence[Config]]
     bind: Optional[Callable[[object, Optional[Config]], None]] = None
+    refine: Optional[Callable[[object, object, Config],
+                              Sequence[Config]]] = None
 
     def tune_space(self, node, hw) -> List[Config]:
         return [tuple(int(d) for d in cfg) for cfg in self.space(node, hw)]
@@ -99,6 +105,33 @@ class Tunable:
             node.attrs.pop(self.attr, None)
         else:
             node.attrs[self.attr] = tuple(int(d) for d in cfg)
+
+    def refine_space(self, node, hw, winning_cfg: Config) -> List[Config]:
+        """Candidate configs *around* ``winning_cfg`` for the SOL-gap
+        refinement planner (``benchmarks/autotune.refine_plan``).  The
+        default probes the power-of-two neighborhood — every combination of
+        halving / keeping / doubling each dimension — minus the winner
+        itself and anything already in the initial ``tune_space`` (those
+        were measured by the sweep; re-measuring them wastes the planner's
+        budget).  Kernels clamp configs defensively at call time (gcd /
+        min-max), so stepping outside the declared space is safe; families
+        whose clamp would collapse most neighbors (divisor-constrained
+        blocks) override ``refine`` with a legal neighborhood."""
+        win = tuple(int(d) for d in winning_cfg)
+        if self.refine is not None:
+            cands = [tuple(int(d) for d in c)
+                     for c in self.refine(node, hw, win)]
+        else:
+            import itertools
+            axes = [sorted({max(1, d // 2), d, 2 * d}) for d in win]
+            cands = [c for c in itertools.product(*axes) if c != win]
+        seen = set(self.tune_space(node, hw)) | {win}
+        out: List[Config] = []
+        for c in cands:
+            if c not in seen and all(d >= 1 for d in c):
+                seen.add(c)
+                out.append(c)
+        return out
 
 
 def bucket_dim(d: int) -> int:
@@ -159,10 +192,13 @@ def node_shape(node) -> Optional[Tuple[int, ...]]:
 @dataclasses.dataclass
 class Measurement:
     us: float                                    # best measured wall time
+                                                 # (min over iters — see
+                                                 # core.measure docstring)
     config: Optional[Tuple[int, ...]] = None     # winning tunable config
     flops: float = 0.0                           # analytic terms of the node
     nbytes: float = 0.0                          # bytes for this impl's
                                                  # memory mode (calibration)
+    mean_us: float = 0.0                         # mean over the same iters
 
     def to_json(self) -> dict:
         d = {"us": self.us}
@@ -172,6 +208,8 @@ class Measurement:
             d["flops"] = self.flops
         if self.nbytes:
             d["nbytes"] = self.nbytes
+        if self.mean_us:
+            d["mean_us"] = self.mean_us
         return d
 
     @classmethod
@@ -180,7 +218,8 @@ class Measurement:
         return cls(us=float(d["us"]),
                    config=tuple(cfg) if cfg else None,
                    flops=float(d.get("flops", 0.0)),
-                   nbytes=float(d.get("nbytes", 0.0)))
+                   nbytes=float(d.get("nbytes", 0.0)),
+                   mean_us=float(d.get("mean_us", 0.0)))
 
 
 class AutotuneCache:
@@ -197,7 +236,8 @@ class AutotuneCache:
     def record(self, op: str, shape: Tuple[int, ...], dtype: str,
                backend: str, impl: str, us: float, *,
                config: Optional[Tuple[int, ...]] = None,
-               flops: float = 0.0, nbytes: float = 0.0) -> None:
+               flops: float = 0.0, nbytes: float = 0.0,
+               mean_us: float = 0.0) -> None:
         """Keep the best (lowest) time per (key, bucket, impl)."""
         bucket = bucket_shape(shape)
         per = self._entries.setdefault((op, dtype, backend), {}) \
@@ -206,30 +246,41 @@ class AutotuneCache:
         if prev is None or us < prev.us:
             per[impl] = Measurement(us=float(us),
                                     config=tuple(config) if config else None,
-                                    flops=float(flops), nbytes=float(nbytes))
+                                    flops=float(flops), nbytes=float(nbytes),
+                                    mean_us=float(mean_us))
 
     def lookup(self, op: str, shape: Optional[Tuple[int, ...]], dtype: str,
                backend: str) -> Dict[str, Measurement]:
         """Measurements for the exact bucket, else the nearest same-rank
         bucket (L1 in log2-space), else {}."""
+        return self.lookup_with_confidence(op, shape, dtype, backend)[0]
+
+    def lookup_with_confidence(self, op: str,
+                               shape: Optional[Tuple[int, ...]], dtype: str,
+                               backend: str
+                               ) -> Tuple[Dict[str, Measurement], str]:
+        """Like :meth:`lookup`, plus WHERE the hit came from: ``"exact"``
+        (the shape's own bucket holds measurements), ``"nearest"`` (resolved
+        to the nearest same-rank bucket — a neighbourhood estimate, never to
+        be reported as an exact measurement), or ``""`` (miss)."""
         if shape is None:
-            return {}
+            return {}, ""
         buckets = self._entries.get((op, dtype, backend))
         if not buckets:
-            return {}
+            return {}, ""
         want = bucket_shape(shape)
         hit = buckets.get(want)
         if hit is not None:
-            return dict(hit)
+            return dict(hit), "exact"
         same_rank = [b for b in buckets if len(b) == len(want)]
         if not same_rank:
-            return {}
+            return {}, ""
 
         def dist(b: Bucket) -> float:
             return sum(abs(math.log2(x) - math.log2(y))
                        for x, y in zip(b, want))
 
-        return dict(buckets[min(same_rank, key=dist)])
+        return dict(buckets[min(same_rank, key=dist)]), "nearest"
 
     def has_bucket(self, op: str, shape: Tuple[int, ...], dtype: str,
                    backend: str) -> bool:

@@ -9,7 +9,22 @@ time (plus the winning config and the impl's roofline terms) into an
 Both measurement paths go through here so they can never drift: the
 offline driver ``benchmarks/autotune.py`` sweeps synthetic (op, shape)
 problems, and ``launch/serve.SolServer.warm_autotune`` sweeps the actual
-nodes of the graphs it is about to serve.
+nodes of the graphs it is about to serve.  The gap-driven refinement
+planner (``benchmarks/autotune.refine_plan``) measures *specific* config
+lists through :func:`measure_impl_configs`, the same primitive the sweep
+uses internally.
+
+Timing convention — min for elections, mean for figures:
+
+Every call is timed individually and both statistics are kept
+(:class:`Timing`).  **Election-grade** numbers (the autotune cache, the
+SOL gap report, the refinement planner) use the **min**: one scheduler
+hiccup inflates a mean arbitrarily but can never deflate a min, so the min
+is the robust estimate of what the kernel costs when the machine is quiet.
+The paper-figure tables (``benchmarks/paper_tables._time``) keep the
+**mean** convention — a figure reproduces the latency a user experiences,
+hiccups included.  Cache records carry both (``Measurement.us`` = min,
+``Measurement.mean_us`` = mean) so either view can be reconstructed.
 """
 from __future__ import annotations
 
@@ -21,23 +36,86 @@ import jax
 
 
 @dataclasses.dataclass(frozen=True)
+class Timing:
+    min_us: float                          # election-grade estimate
+    mean_us: float                         # user-experienced average
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigMeasurement:
+    config: Optional[Tuple[int, ...]]      # the swept tunable config
+    us: float                              # min wall time
+    mean_us: float                         # mean wall time
+    error: Optional[str] = None            # impl raised for this config
+
+
+@dataclasses.dataclass(frozen=True)
 class ImplMeasurement:
     impl: str                              # impl name, as cache-recorded
-    us: float                              # best measured time
+    us: float                              # best measured (min) time
     config: Optional[Tuple[int, ...]]      # winning tunable config (or None)
     n_configs: int                         # size of the swept config space
+    mean_us: float = 0.0                   # mean time of the winning config
+
+
+def time_call_stats(fn: Callable[[], object], warmup: int = 2,
+                    iters: int = 5) -> Timing:
+    """Time ``fn`` per call (µs) after warmup and return both min and mean
+    (see the module docstring for which consumer uses which)."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return Timing(min_us=min(samples), mean_us=sum(samples) / len(samples))
 
 
 def time_call(fn: Callable[[], object], warmup: int = 2,
               iters: int = 5) -> float:
-    """Mean wall time of ``fn`` in µs after warmup (same convention as
-    ``benchmarks/paper_tables._time``)."""
-    for _ in range(max(warmup, 1)):
-        jax.block_until_ready(fn())
-    t0 = time.perf_counter()
-    for _ in range(max(iters, 1)):
-        jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / max(iters, 1) * 1e6
+    """Election-grade wall time of ``fn`` in µs: the **min** over ``iters``
+    individually-timed calls after warmup.  NOTE this deliberately differs
+    from ``benchmarks/paper_tables._time`` (mean over a single timed loop):
+    a scheduler hiccup distorts a mean — and with it an election — but
+    never a min.  Use :func:`time_call_stats` when both are needed."""
+    return time_call_stats(fn, warmup, iters).min_us
+
+
+def measure_impl_configs(node, vals: Sequence[object], backend, impl,
+                         configs: Sequence[Optional[Tuple[int, ...]]], *,
+                         warmup: int = 2, iters: int = 5,
+                         skip_errors: bool = False
+                         ) -> List[ConfigMeasurement]:
+    """Time ``impl`` on ``node`` once per config in ``configs`` (``None``
+    means the impl's untuned default).  The node's tunable attr is restored
+    in a ``try/finally`` — an impl raising mid-measurement must never leave
+    a swept config pinned on the node (a stale pin would silently change
+    what a later election or lowering executes).
+
+    With ``skip_errors=True`` a raising config yields a ``ConfigMeasurement``
+    with ``error`` set instead of propagating — the refinement planner uses
+    this to probe configs outside an impl's declared space safely."""
+    tun = impl.tunable
+    out: List[ConfigMeasurement] = []
+    try:
+        for cfg in configs:
+            if tun is not None:
+                tun.bind_config(node, cfg)
+            try:
+                fn = jax.jit(lambda *a: impl.fn(node, list(a), backend))
+                t = time_call_stats(lambda: fn(*vals), warmup, iters)
+            except Exception as e:
+                if not skip_errors:
+                    raise
+                out.append(ConfigMeasurement(cfg, float("inf"), float("inf"),
+                                             error=f"{type(e).__name__}: {e}"))
+                continue
+            out.append(ConfigMeasurement(cfg, t.min_us, t.mean_us))
+    finally:
+        if tun is not None:
+            tun.bind_config(node, None)    # never leave a sweep's pin behind
+    return out
 
 
 def sweep_node(node, vals: Sequence[object], backend, cache, *,
@@ -59,20 +137,13 @@ def sweep_node(node, vals: Sequence[object], backend, cache, *,
             space = tun.tune_space(node, backend.hw)
             if space:
                 configs = list(space)
-        best_us, best_cfg = float("inf"), None
-        for cfg in configs:
-            if tun is not None:
-                tun.bind_config(node, cfg)
-            fn = jax.jit(lambda *a: impl.fn(node, list(a), backend))
-            us = time_call(lambda: fn(*vals), warmup, iters)
-            if us < best_us:
-                best_us, best_cfg = us, cfg
-        if tun is not None:
-            tun.bind_config(node, None)    # never leave a sweep's pin behind
+        results = measure_impl_configs(node, vals, backend, impl, configs,
+                                       warmup=warmup, iters=iters)
+        best = min(results, key=lambda r: r.us)
         nbytes = roundtrip if impl.memory == "roundtrip" else streamed
         cache.record(node.op.value, AT.node_shape(node), node.spec.dtype,
-                     backend.name, impl.name, best_us, config=best_cfg,
-                     flops=flops, nbytes=nbytes)
-        out.append(ImplMeasurement(impl.name, best_us, best_cfg,
-                                   len(configs)))
+                     backend.name, impl.name, best.us, config=best.config,
+                     flops=flops, nbytes=nbytes, mean_us=best.mean_us)
+        out.append(ImplMeasurement(impl.name, best.us, best.config,
+                                   len(configs), mean_us=best.mean_us))
     return out

@@ -324,6 +324,20 @@ def _node_cost_terms(n: Node) -> Tuple[float, float, float]:
     return n.spec.size * _EW_FLOPS, streamed, streamed
 
 
+def node_roofline_terms(n: Node, hw: "object",
+                        memory: str = "streamed"
+                        ) -> Tuple[float, float, float]:
+    """Public face of :func:`_node_cost_terms` for the speed-of-light
+    report (``core.sol``): the node's (flops, nbytes, bound_s) under the
+    given impl memory mode, with the bound computed by the SAME
+    ``HardwareSpec.roofline_s`` the election pass costs with — the SOL gap
+    is measured against the model that elected the kernel, never a
+    parallel formula."""
+    flops, streamed, roundtrip = _node_cost_terms(n)
+    nbytes = roundtrip if memory == "roundtrip" else streamed
+    return flops, nbytes, hw.roofline_s(flops, nbytes)
+
+
 def elect_implementations(g: Graph, backend: "object") -> Graph:
     """Cost-based per-node impl election over the backend dispatch table.
 

@@ -67,7 +67,8 @@ class SolModel(nn.Module):
         return self.graph.stats()
 
     def impl_report(self, by_kind: bool = False,
-                    provenance: bool = False) -> Dict[str, Any]:
+                    provenance: bool = False,
+                    sol: bool = False) -> Any:
         """Elected-implementation report.  Default: a flat histogram
         (impl name → node count).  With ``by_kind=True``: a per-OpKind
         breakdown ``{op value → {impl name → count}}`` showing which flavour
@@ -76,7 +77,19 @@ class SolModel(nn.Module):
         {"measured"|"calibrated"|"analytical" → n}, "pinned": [cfg, ...]}}``
         — whether each election came from autotune-cache measurements or the
         cost model, plus any tuned kernel configs the measured elections
-        pinned on the nodes (``"pinned"`` only appears when non-empty)."""
+        pinned on the nodes (``"pinned"`` only appears when non-empty).
+        With ``sol=True``: the speed-of-light view (``core.sol``) — one dict
+        per elected node, ranked worst gap first, with the roofline
+        ``bound_us``, the measured (or calibrated-estimate) ``us``, their
+        ``ratio`` (measured ÷ speed-of-light bound; 1.0 = at the hardware
+        limit) and the ``confidence``/``source`` provenance tags — how far
+        each elected kernel sits from what the hardware allows."""
+        if sol:
+            from ..core import autotune
+            from ..core import sol as sol_mod
+            rows = sol_mod.node_rows(self.graph, self.backend,
+                                     autotune.get_cache())
+            return [r.to_json() for r in sol_mod.rank(rows)]
         if provenance:
             prov = getattr(self.graph, "election_provenance", {})
             pins = getattr(self.graph, "election_pinned", {})

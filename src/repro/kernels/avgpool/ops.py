@@ -42,6 +42,14 @@ def avgpool_tune_space(n: Node, hw) -> List[Tuple[int]]:
     return [(bc,) for bc in sorted(cands)]
 
 
+def avgpool_refine_space(n: Node, hw, cfg) -> List[Tuple[int]]:
+    """SOL-gap planner neighborhood: the channel block must divide C, so
+    probe divisor-clamped half/double steps around the winner."""
+    c = n.spec.shape[1]
+    bc = int(cfg[0])
+    return [(math.gcd(max(1, v), c),) for v in (bc // 2, bc * 2, bc * 4)]
+
+
 def _avgpool_impl(n: Node, vals: Sequence[jax.Array],
                   backend: "registry.Backend") -> jax.Array:
     k = n.attrs.get("kernel", 2)
@@ -54,4 +62,5 @@ def _avgpool_impl(n: Node, vals: Sequence[jax.Array],
 registry.register_shared_impl(
     OpKind.AVGPOOL, _avgpool_impl, name="pallas.avgpool",
     requires=("pallas",), supports=_supports,
-    tunable=Tunable("avgpool_block", avgpool_tune_space))
+    tunable=Tunable("avgpool_block", avgpool_tune_space,
+                    refine=avgpool_refine_space))

@@ -42,6 +42,16 @@ def rglru_tune_space(n: Node, hw) -> List[Tuple[int]]:
     return [(bd,) for bd in sorted(cands)]
 
 
+def rglru_refine_space(n: Node, hw, cfg) -> List[Tuple[int]]:
+    """SOL-gap planner neighborhood: the channel block must divide D, so
+    probe the divisor-clamped half/double of the winning block instead of
+    the default raw power-of-two neighbors (which gcd would collapse back
+    onto the winner)."""
+    d = n.spec.shape[-1]
+    bd = int(cfg[0])
+    return [(_clamp_bd(c, d),) for c in (bd // 2, bd * 2, bd * 4)]
+
+
 def _rglru_pallas_impl(n: Node, vals: Sequence[jax.Array],
                        backend: "registry.Backend") -> jax.Array:
     a, b, h0 = vals
@@ -60,6 +70,7 @@ def _rglru_ref_impl(n: Node, vals: Sequence[jax.Array],
 registry.register_shared_impl(
     OpKind.RGLRU_SCAN, _rglru_pallas_impl, name="pallas.rglru_scan",
     requires=("pallas",), supports=lambda n: len(n.spec.shape) == 3,
-    tunable=Tunable("rglru_block", rglru_tune_space))
+    tunable=Tunable("rglru_block", rglru_tune_space,
+                    refine=rglru_refine_space))
 registry.register_reference_impl(
     OpKind.RGLRU_SCAN, _rglru_ref_impl, name="ref.rglru_scan")

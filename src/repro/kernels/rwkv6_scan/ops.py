@@ -40,6 +40,14 @@ def rwkv6_tune_space(n: Node, hw) -> List[Tuple[int]]:
     return [(bt,) for bt in sorted(cands)]
 
 
+def rwkv6_refine_space(n: Node, hw, cfg) -> List[Tuple[int]]:
+    """SOL-gap planner neighborhood: the time block must divide T, so probe
+    divisor-clamped half/double steps around the winner."""
+    t = n.spec.shape[1]
+    bt = int(cfg[0])
+    return [(math.gcd(max(1, c), t),) for c in (bt // 2, bt * 2, bt * 4)]
+
+
 def _rwkv6_pallas_impl(n: Node, vals: Sequence[jax.Array],
                        backend: "registry.Backend") -> jax.Array:
     cfg = n.attrs.get("rwkv6_block")
@@ -56,6 +64,7 @@ def _rwkv6_ref_impl(n: Node, vals: Sequence[jax.Array],
 registry.register_shared_impl(
     OpKind.RWKV6_SCAN, _rwkv6_pallas_impl, name="pallas.rwkv6_scan",
     requires=("pallas",), supports=lambda n: len(n.spec.shape) == 4,
-    tunable=Tunable("rwkv6_block", rwkv6_tune_space))
+    tunable=Tunable("rwkv6_block", rwkv6_tune_space,
+                    refine=rwkv6_refine_space))
 registry.register_reference_impl(
     OpKind.RWKV6_SCAN, _rwkv6_ref_impl, name="ref.rwkv6_scan")

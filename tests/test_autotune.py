@@ -488,6 +488,81 @@ def test_driver_sweeps_registry_declared_tunables():
     assert scan["pallas.rglru_scan"].config is not None
 
 
+def test_measure_unpins_swept_config_when_impl_raises():
+    """ISSUE satellite (regression): an impl raising mid-sweep must not
+    leave the swept Tunable config pinned on the node — a stale pin would
+    silently change what a later election or lowering executes.  Fails
+    before the try/finally fix in core.measure.measure_impl_configs."""
+    import types
+
+    from repro.core.autotune import Tunable
+    from repro.core.measure import measure_impl_configs
+
+    _g, lin = _linear_graph()
+    backend = get_backend("host_cpu")
+    calls = []
+
+    def exploding(node, vals, bk):
+        calls.append(tuple(node.attrs.get("boom_block") or ()))
+        if len(calls) >= 2:
+            raise RuntimeError("kernel rejects this config")
+        return vals[0]
+
+    impl = types.SimpleNamespace(
+        fn=exploding, tunable=Tunable("boom_block", lambda n, hw: []))
+
+    with pytest.raises(RuntimeError):
+        measure_impl_configs(lin, [jnp.ones((2, 16))], backend, impl,
+                             [(8,), (16,), (32,)], warmup=0, iters=1)
+    assert "boom_block" not in lin.attrs          # restored despite the raise
+    assert calls == [(8,), (16,)]                 # raised on the second config
+
+    # skip_errors=True keeps sweeping, reports the error per config, and
+    # still restores the node
+    calls.clear()
+    out = measure_impl_configs(lin, [jnp.ones((2, 16))], backend, impl,
+                               [(8,), (16,), (32,)], warmup=0, iters=1,
+                               skip_errors=True)
+    assert "boom_block" not in lin.attrs
+    assert [m.error is None for m in out] == [True, False, False]
+    assert all(m.us == float("inf") for m in out if m.error)
+
+
+def test_sweep_node_restores_attrs_and_records_min_and_mean():
+    """The real sweep leaves no pin behind and records both timing stats
+    (us = min for elections, mean_us for figure-grade views)."""
+    from repro.core.measure import sweep_node
+
+    g, lin = _linear_graph(8, 64, 32)
+    x = jnp.ones((8, 64), jnp.float32)
+    w = jnp.ones((32, 64), jnp.float32)
+    cache = AutotuneCache()
+    out = sweep_node(lin, [x, w], get_backend("pallas_interpret"), cache,
+                     warmup=0, iters=2)
+    assert "mxu_block" not in lin.attrs
+    got = cache.lookup("linear", (8, 64, 32), "float32", "pallas_interpret")
+    for m in out:
+        rec = got[m.impl]
+        assert rec.mean_us >= rec.us > 0.0        # mean can never beat min
+        assert rec.mean_us == m.mean_us
+
+
+def test_time_call_is_min_of_individually_timed_iters(monkeypatch):
+    """ISSUE satellite: election-grade timings use the min over iters (a
+    hiccup inflates a mean but never a min); time_call_stats carries both."""
+    from repro.core import measure
+
+    ticks = iter([0.0, 30e-6, 1.0, 1.0 + 10e-6, 2.0, 2.0 + 20e-6])
+    monkeypatch.setattr(measure.time, "perf_counter", lambda: next(ticks))
+    t = measure.time_call_stats(lambda: 0, warmup=1, iters=3)
+    assert t.min_us == pytest.approx(10.0)
+    assert t.mean_us == pytest.approx(20.0)
+
+    ticks = iter([0.0, 30e-6, 1.0, 1.0 + 10e-6, 2.0, 2.0 + 20e-6])
+    assert measure.time_call(lambda: 0, warmup=1, iters=3) \
+        == pytest.approx(10.0)
+
+
 def test_verify_cache_roundtrip_with_attention_flip(tmp_path):
     """benchmarks.autotune --verify end to end: a tuned cache written to
     disk yields measured elections on reload, and the attention flip proof

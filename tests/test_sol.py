@@ -1,0 +1,441 @@
+"""Speed-of-light (SOL) gap analysis tests: the roofline bound shares the
+election pass's cost model, ratios stay finite and non-negative for ANY
+cache entry (hypothesis), nearest-bucket provenance never masquerades as an
+exact measurement, ``impl_report(sol=True)`` surfaces ranked per-node rows,
+the gap-driven refinement planner provably closes a doctored wide gap by
+electing a config OUTSIDE the initially declared tune_space (ISSUE
+acceptance), and ``tools/bench_diff.py`` gates perf regressions."""
+import importlib.util
+import json
+import math
+import os
+import sys
+
+from _hypo import hypothesis, st  # real hypothesis, or skip-stubs when absent
+import pytest
+
+from repro.backends import get_backend
+from repro.backends import registry as R
+from repro.core import autotune, ir, passes, sol
+from repro.core.autotune import AutotuneCache, Tunable
+from repro.core.ir import Graph, Node, OpKind, TensorSpec
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    """Every test starts (and leaves the process) with a cold session cache.
+    An explicit empty AutotuneCache, not set_cache(None): None means 'reset
+    to default', which would re-read SOL_AUTOTUNE_CACHE from the env."""
+    autotune.set_cache(AutotuneCache())
+    yield
+    autotune.set_cache(AutotuneCache())
+
+
+def _linear_graph(b=2, d_in=16, d_out=32):
+    x = ir.input_node((b, d_in), name="x")
+    w = ir.param_node((d_out, d_in), name="w")
+    lin = Node(OpKind.LINEAR, [x, w], TensorSpec((b, d_out)),
+               attrs={"out_features": d_out})
+    return Graph([x], [lin], {"w": w}), lin
+
+
+# -- the bound: one cost model, shared with the election pass -------------------
+
+def test_sol_bound_is_the_roofline_model():
+    """sol_bound_us is HardwareSpec.roofline_s scaled to µs — the same
+    cost model elections use, not a parallel formula."""
+    hw = get_backend("xla").hw
+    flops, nbytes = 2 * 256 ** 3, 3 * 256 * 256 * 4
+    bound_us, dom = sol.sol_bound_us(hw, flops, nbytes)
+    assert bound_us == pytest.approx(hw.roofline_s(flops, nbytes) * 1e6)
+    assert dom in ("compute", "memory")
+    # dominance follows the larger term
+    assert sol.sol_bound_us(hw, 1e15, 1.0)[1] == "compute"
+    assert sol.sol_bound_us(hw, 1.0, 1e12)[1] == "memory"
+    # degenerate terms: no bound, never a division by zero downstream
+    assert sol.sol_bound_us(hw, 0.0, 0.0) == (0.0, "")
+
+
+def test_node_roofline_terms_matches_node_cost_terms():
+    """passes.node_roofline_terms is a thin view over _node_cost_terms —
+    the SOL report and the election literally share the numbers."""
+    _g, lin = _linear_graph()
+    hw = get_backend("xla").hw
+    flops, streamed, roundtrip = passes._node_cost_terms(lin)
+    f1, b1, s1 = passes.node_roofline_terms(lin, hw)  # streamed default
+    assert (f1, b1) == (flops, streamed)
+    assert s1 == pytest.approx(hw.roofline_s(flops, streamed))
+    f2, b2, s2 = passes.node_roofline_terms(lin, hw, memory="roundtrip")
+    assert (f2, b2) == (flops, roundtrip)
+    assert s2 == pytest.approx(hw.roofline_s(flops, roundtrip))
+
+
+# -- ratio guarantees (hypothesis) ----------------------------------------------
+
+@hypothesis.given(us=st.floats(allow_nan=True, allow_infinity=True),
+                  bound=st.floats(allow_nan=True, allow_infinity=True))
+def test_sol_ratio_always_finite_nonnegative(us, bound):
+    r = sol.sol_ratio(us, bound)
+    assert math.isfinite(r) and r >= 0.0
+
+
+@hypothesis.given(
+    us=st.floats(min_value=0.0, allow_nan=True, allow_infinity=True),
+    flops=st.floats(allow_nan=True, allow_infinity=True),
+    nbytes=st.floats(allow_nan=True, allow_infinity=True),
+    dims=st.lists(st.integers(min_value=1, max_value=2 ** 20),
+                  min_size=1, max_size=4))
+def test_cache_rows_ratios_finite_for_arbitrary_entries(us, flops, nbytes,
+                                                        dims):
+    """ISSUE satellite: ANY cache entry — degenerate terms, inf/nan times,
+    whatever a corrupt or hand-edited file delivers — yields a SOL row with
+    a finite, non-negative ratio."""
+    c = AutotuneCache()
+    c.record("matmul", tuple(dims), "float32", "xla", "ref.matmul", us,
+             flops=flops, nbytes=nbytes)
+    rows = sol.cache_rows(c)
+    assert len(rows) == 1
+    assert math.isfinite(rows[0].ratio) and rows[0].ratio >= 0.0
+    assert math.isfinite(rows[0].bound_us) and rows[0].bound_us >= 0.0
+
+
+# -- provenance: exact vs nearest, measured vs calibrated -----------------------
+
+def test_cache_rows_are_exact_measured_and_best_only_elects():
+    c = AutotuneCache()
+    c.record("matmul", (256, 256, 256), "float32", "xla", "ref.matmul",
+             50.0, flops=2 * 256 ** 3, nbytes=3 * 256 * 256 * 4)
+    c.record("matmul", (256, 256, 256), "float32", "xla",
+             "pallas.matmul_mxu", 30.0, config=(128, 128, 128),
+             flops=2 * 256 ** 3, nbytes=3 * 256 * 256 * 4)
+    rows = sol.cache_rows(c)
+    assert len(rows) == 2
+    assert all(r.confidence == "exact" and r.source == "measured"
+               for r in rows)
+    assert all(r.ratio == pytest.approx(r.us / r.bound_us) for r in rows)
+    best = sol.cache_rows(c, best_only=True)
+    assert len(best) == 1 and best[0].impl == "pallas.matmul_mxu"
+
+
+def test_node_rows_nearest_bucket_is_tagged_nearest():
+    """ISSUE satellite: a nearest-bucket hit surfaces confidence='nearest'
+    — an estimate, visibly distinct from the shape's own measurement."""
+    g, lin = _linear_graph(b=2, d_in=16, d_out=32)   # keys on (2, 16, 32)
+    lin.impl = "ref.linear"
+    backend = get_backend("xla")
+    c = AutotuneCache()
+    c.record("linear", (2, 16, 64), "float32", "xla", "ref.linear", 50.0,
+             flops=1.0, nbytes=1.0)                  # only a NEIGHBOR bucket
+    rows = sol.node_rows(g, backend, c)
+    (row,) = [r for r in rows if r.op == "linear"]
+    assert row.confidence == "nearest" and row.source == "measured"
+    assert row.us == 50.0 and row.ratio > 0.0
+
+    c.record("linear", (2, 16, 32), "float32", "xla", "ref.linear", 40.0,
+             flops=1.0, nbytes=1.0)                  # now the exact bucket
+    (row,) = [r for r in sol.node_rows(g, backend, c) if r.op == "linear"]
+    assert row.confidence == "exact" and row.us == 40.0
+
+
+def test_node_rows_cold_cache_stays_analytical():
+    """No measurement, no calibration → source='analytical' with no ratio:
+    silence stays visible, it never fakes a measurement."""
+    g, lin = _linear_graph()
+    lin.impl = "ref.linear"
+    (row,) = [r for r in sol.node_rows(g, get_backend("xla"),
+                                       AutotuneCache()) if r.op == "linear"]
+    assert row.source == "analytical" and row.ratio == 0.0 and row.us == 0.0
+
+
+def test_node_rows_calibrated_has_no_bucket_confidence():
+    g, lin = _linear_graph()
+    lin.impl = "ref.linear"
+    c = AutotuneCache()
+    c.set_calibration("xla", "linear",
+                      {"s_per_flop": 1e-12, "s_per_byte": 1e-10, "n": 4.0})
+    (row,) = [r for r in sol.node_rows(g, get_backend("xla"), c)
+              if r.op == "linear"]
+    assert row.source == "calibrated"
+    assert row.confidence == ""           # an estimate has no bucket hit
+    assert row.us > 0.0 and math.isfinite(row.ratio)
+
+
+def test_rank_never_lets_estimates_outrank_exact_measurements():
+    """A nearest-bucket or calibrated row NEVER sorts ahead of an
+    exact-bucket measurement, no matter how large its ratio."""
+    def row(ratio, conf, src):
+        return sol.SolRow(op="matmul", bucket=(64, 64, 64), dtype="float32",
+                          backend="xla", impl="ref.matmul", us=ratio,
+                          bound_us=1.0, ratio=ratio, bottleneck="compute",
+                          confidence=conf, source=src)
+    exact_small = row(2.0, "exact", "measured")
+    exact_big = row(90.0, "exact", "measured")
+    nearest_huge = row(1e6, "nearest", "measured")
+    calibrated_huge = row(1e9, "", "calibrated")
+    ranked = sol.rank([nearest_huge, exact_small, calibrated_huge, exact_big])
+    assert ranked[0] is exact_big and ranked[1] is exact_small
+    assert all(r in (nearest_huge, calibrated_huge) for r in ranked[2:])
+    # within the estimate tier, worst ratio still first
+    assert ranked[2] is calibrated_huge
+
+
+def test_render_lists_every_row():
+    c = AutotuneCache()
+    c.record("matmul", (64, 64, 64), "float32", "xla", "ref.matmul", 9.0,
+             flops=2 * 64 ** 3, nbytes=3 * 64 * 64 * 4)
+    text = sol.render(sol.rank(sol.cache_rows(c)))
+    assert "ref.matmul" in text and "ratio" in text and "64x64x64" in text
+
+
+# -- impl_report(sol=True) ------------------------------------------------------
+
+def test_impl_report_sol_surfaces_ranked_rows():
+    from repro.frontends import nn
+    from repro.frontends.optimize import optimize
+    m = optimize(nn.Sequential(nn.Linear(16, 32), nn.GELU()), (2, 16),
+                 backend="xla")
+    rows = m.impl_report(sol=True)
+    assert rows and all(
+        {"op", "impl", "ratio", "bound_us", "confidence", "source"}
+        <= set(r) for r in rows)
+    assert all(math.isfinite(r["ratio"]) and r["ratio"] >= 0.0 for r in rows)
+    # exact measurements (if any) must precede every estimate row
+    tiers = [0 if (r["confidence"] == "exact" and r["source"] == "measured")
+             else 1 for r in rows]
+    assert tiers == sorted(tiers)
+
+
+def test_impl_report_sol_reflects_cache_measurements():
+    from repro.frontends import nn
+    from repro.frontends.optimize import optimize
+    m = optimize(nn.Linear(16, 32), (2, 16), backend="xla")
+    lin = m.graph.nodes_of(OpKind.LINEAR)[0]
+    cache = autotune.get_cache()
+    cache.record("linear", autotune.node_shape(lin), "float32", "xla",
+                 lin.impl, 25.0, flops=1.0, nbytes=1.0)
+    (row,) = [r for r in m.impl_report(sol=True) if r["op"] == "linear"]
+    assert row["source"] == "measured" and row["confidence"] == "exact"
+    assert row["us"] == 25.0 and row["ratio"] > 0.0
+
+
+# -- Tunable.refine_space -------------------------------------------------------
+
+def test_refine_space_default_pow2_neighborhood():
+    tun = Tunable("blk", lambda n, hw: [(64, 64), (128, 128)])
+    neigh = tun.refine_space(None, None, (64, 64))
+    assert neigh                                   # something to probe
+    assert (64, 64) not in neigh                   # never the winner itself
+    assert (128, 128) not in neigh                 # never the initial space
+    assert (32, 32) in neigh and (64, 128) in neigh
+    assert all(all(d >= 1 for d in c) for c in neigh)
+    assert len(set(neigh)) == len(neigh)           # deduplicated
+
+
+def test_refine_space_floor_at_one():
+    tun = Tunable("blk", lambda n, hw: [])
+    neigh = tun.refine_space(None, None, (1,))
+    assert neigh == [(2,)]                         # 1//2 clamps to 1 == win
+
+
+def test_refine_space_custom_hook_stays_legal():
+    """Divisor-constrained families override refine: every avgpool probe
+    must divide the channel count."""
+    from repro.kernels.avgpool.ops import avgpool_refine_space
+    n = Node(OpKind.AVGPOOL, [ir.input_node((1, 48, 10, 10))],
+             TensorSpec((1, 48, 8, 8)), attrs={"kernel": 3, "stride": 1})
+    hw = get_backend("xla").hw
+    for (bc,) in avgpool_refine_space(n, hw, (8,)):
+        assert 48 % bc == 0
+
+
+# -- the gap-driven refinement planner (ISSUE acceptance) -----------------------
+
+def _measurement(config, us):
+    from repro.core.measure import ConfigMeasurement
+    return ConfigMeasurement(config=config, us=us, mean_us=us)
+
+
+def test_refine_plan_closes_doctored_gap_outside_tune_space():
+    """ISSUE acceptance: a doctored wide-gap cell gets refinement rounds,
+    elects a config OUTSIDE the initially declared tune_space, and its
+    recorded SOL ratio strictly improves."""
+    from benchmarks.autotune import _node, refine_plan
+    backend = get_backend("pallas_interpret")
+    node = _node("matmul", (32, 32, 32))
+    tun = R.get_impl("pallas.matmul_mxu").tunable
+    initial = set(tun.tune_space(node, backend.hw))
+    assert initial, "test premise: the tiny matmul has a tune space"
+    win = sorted(initial)[0]
+    target = tun.refine_space(node, backend.hw, win)[0]
+    assert target not in initial
+
+    c = AutotuneCache()
+    c.record("matmul", (32, 32, 32), "float32", "pallas_interpret",
+             "pallas.matmul_mxu", 4000.0, config=win,
+             flops=2 * 32 ** 3, nbytes=3 * 32 * 32 * 4)
+
+    def fake_measure(node, vals, bk, impl, configs):
+        # the probe at `target` is 4x faster; everything else is worse
+        return [_measurement(c2, 1000.0 if tuple(c2) == target else 9000.0)
+                for c2 in configs]
+
+    (rep,) = refine_plan(c, "pallas_interpret", top_k=1, rounds=3,
+                         budget=64, measure=fake_measure)
+    assert rep["refined_impl"] == "pallas.matmul_mxu"
+    assert rep["rounds"] >= 1 and rep["configs_measured"] > 0
+    assert rep["config"] == target and rep["outside_space"]
+    assert rep["after_us"] == 1000.0
+    assert rep["after_ratio"] < rep["before_ratio"]     # strictly improves
+    # the win is recorded back into the cache so a later election pins it
+    m = c.lookup("matmul", (32, 32, 32), "float32",
+                 "pallas_interpret")["pallas.matmul_mxu"]
+    assert m.us == 1000.0 and m.config == target
+
+
+def test_refine_plan_refines_tunable_even_when_ref_wins_the_cell():
+    """When an untunable reference impl currently wins a cell, the planner
+    still probes the tunable family's neighborhood — and flips the cell's
+    election when refinement beats the old winner."""
+    from benchmarks.autotune import _node, refine_plan
+    backend = get_backend("pallas_interpret")
+    node = _node("matmul", (32, 32, 32))
+    tun = R.get_impl("pallas.matmul_mxu").tunable
+    win = sorted(tun.tune_space(node, backend.hw))[0]
+    target = tun.refine_space(node, backend.hw, win)[0]
+
+    c = AutotuneCache()
+    c.record("matmul", (32, 32, 32), "float32", "pallas_interpret",
+             "ref.matmul", 500.0, flops=2 * 32 ** 3, nbytes=3 * 32 * 32 * 4)
+    c.record("matmul", (32, 32, 32), "float32", "pallas_interpret",
+             "pallas.matmul_mxu", 4000.0, config=win,
+             flops=2 * 32 ** 3, nbytes=3 * 32 * 32 * 4)
+
+    def fake_measure(node, vals, bk, impl, configs):
+        return [_measurement(c2, 100.0 if tuple(c2) == target else 9000.0)
+                for c2 in configs]
+
+    (rep,) = refine_plan(c, "pallas_interpret", top_k=1, rounds=3,
+                         budget=64, measure=fake_measure)
+    assert rep["before_us"] == 500.0                    # ref won the cell
+    assert rep["refined_impl"] == "pallas.matmul_mxu"
+    assert rep["impl"] == "pallas.matmul_mxu"           # election flipped
+    assert rep["after_us"] == 100.0 and rep["outside_space"]
+    assert rep["after_ratio"] < rep["before_ratio"]
+
+
+def test_refine_plan_early_stops_when_gap_stops_closing():
+    from benchmarks.autotune import _node, refine_plan
+    backend = get_backend("pallas_interpret")
+    node = _node("matmul", (32, 32, 32))
+    tun = R.get_impl("pallas.matmul_mxu").tunable
+    win = sorted(tun.tune_space(node, backend.hw))[0]
+
+    c = AutotuneCache()
+    c.record("matmul", (32, 32, 32), "float32", "pallas_interpret",
+             "pallas.matmul_mxu", 4000.0, config=win,
+             flops=2 * 32 ** 3, nbytes=3 * 32 * 32 * 4)
+
+    def no_gain(node, vals, bk, impl, configs):
+        return [_measurement(c2, 3999.0) for c2 in configs]   # < min_gain
+
+    (rep,) = refine_plan(c, "pallas_interpret", top_k=1, rounds=5,
+                         budget=1000, measure=no_gain)
+    assert rep["rounds"] == 1                           # stopped, not 5
+    assert rep["config"] == win and not rep["outside_space"]
+    assert rep["after_us"] == 4000.0
+
+
+def test_refine_plan_flags_rewrite_candidates():
+    """A cell with nothing to tune whose gap stays huge is a rewrite
+    candidate: no config reaches the hardware limit, the kernel needs
+    work."""
+    from benchmarks.autotune import refine_plan
+    c = AutotuneCache()
+    c.record("matmul", (32, 32, 32), "float32", "pallas_interpret",
+             "ref.matmul", 1e6, flops=2 * 32 ** 3, nbytes=3 * 32 * 32 * 4)
+
+    def never_called(node, vals, bk, impl, configs):    # pragma: no cover
+        raise AssertionError("no tunable impl — nothing to measure")
+
+    (rep,) = refine_plan(c, "pallas_interpret", top_k=1,
+                         measure=never_called)
+    assert rep["rewrite_candidate"] and rep["rounds"] == 0
+    assert "nothing to refine" in rep["note"]
+
+
+# -- roofline backend resolution (satellite) ------------------------------------
+
+def test_roofline_hw_resolves_from_active_backend(monkeypatch):
+    from benchmarks import roofline
+    monkeypatch.delenv("SOL_BACKEND", raising=False)
+    assert roofline.active_backend_name() == roofline.DEFAULT_BACKEND
+    assert roofline.active_hw().name == get_backend("xla").hw.name
+    monkeypatch.setenv("SOL_BACKEND", "host_cpu")
+    assert roofline.active_backend_name() == "host_cpu"
+    assert roofline.active_hw().name == get_backend("host_cpu").hw.name
+    # an explicit backend arg overrides the environment
+    assert (roofline.active_hw("pallas_interpret").name
+            == get_backend("pallas_interpret").hw.name)
+
+
+# -- tools/bench_diff.py (the CI perf-regression gate) --------------------------
+
+def _bench_diff():
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                        "bench_diff.py")
+    spec = importlib.util.spec_from_file_location("bench_diff", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _artifact(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(
+        {"rows": [{"name": n, "us_per_call": us, "derived": ""}
+                  for n, us in rows.items()]}))
+    return str(p)
+
+
+def test_bench_diff_missing_baseline_passes_trivially(tmp_path):
+    bd = _bench_diff()
+    cur = _artifact(tmp_path, "cur.json", {"a": 10.0})
+    assert bd.main([str(tmp_path / "nope.json"), cur]) == 0
+    assert bd.main([cur, str(tmp_path / "nope.json")]) == 2  # current missing
+
+
+def test_bench_diff_catches_injected_2x_slowdown(tmp_path):
+    """ISSUE acceptance: an injected 2x slowdown on a shared row fails."""
+    bd = _bench_diff()
+    base = _artifact(tmp_path, "base.json", {"a": 100.0, "b": 50.0})
+    cur = _artifact(tmp_path, "cur.json", {"a": 200.0, "b": 50.0})
+    assert bd.main([base, cur, "--threshold", "0.15"]) == 1
+    regs, _ = bd.diff(bd.load_rows(base), bd.load_rows(cur))
+    assert [r[0] for r in regs] == ["a"]
+
+
+def test_bench_diff_within_threshold_and_improvements_pass(tmp_path):
+    bd = _bench_diff()
+    base = _artifact(tmp_path, "base.json", {"a": 100.0, "b": 50.0})
+    cur = _artifact(tmp_path, "cur.json", {"a": 110.0, "b": 10.0})
+    assert bd.main([base, cur, "--threshold", "0.15"]) == 0
+
+
+def test_bench_diff_min_us_noise_floor(tmp_path):
+    """Sub-noise-floor rows may double without failing the gate; rows
+    crossing the floor still count."""
+    bd = _bench_diff()
+    base = _artifact(tmp_path, "base.json", {"tiny": 2.0, "real": 100.0})
+    cur = _artifact(tmp_path, "cur.json", {"tiny": 4.0, "real": 100.0})
+    assert bd.main([base, cur, "--min-us", "20"]) == 0
+    assert bd.main([base, cur]) == 1                 # no floor → tiny fails
+    crossing = _artifact(tmp_path, "cross.json", {"tiny": 40.0,
+                                                  "real": 100.0})
+    assert bd.main([base, crossing, "--min-us", "20"]) == 1
+
+
+def test_bench_diff_disjoint_rows_pass(tmp_path):
+    bd = _bench_diff()
+    base = _artifact(tmp_path, "base.json", {"old": 10.0})
+    cur = _artifact(tmp_path, "cur.json", {"new": 99.0})
+    assert bd.main([base, cur]) == 0

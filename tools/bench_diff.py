@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json artifacts and gate CI on perf regressions.
+
+Any two artifacts the benchmark harness emits (``BENCH_sol.json``,
+``BENCH_matmul.json``, ``BENCH_serve.json``, or the combined
+``BENCH_<sha>.json``) share one schema: ``{"rows": [{"name", "us_per_call",
+"derived"}]}`` where every ``us_per_call`` is lower-is-better (throughput
+rows are encoded as µs/token).  This tool joins the two row sets by name
+and fails (exit 1) when any shared row's time regressed by more than
+``--threshold`` (default 15%), so speed never silently regresses.
+
+    python tools/bench_diff.py baseline/BENCH_sol.json BENCH_sol.json
+
+CI feeds it the previous run's uploaded artifact; the stdlib-only
+implementation keeps it runnable anywhere.  A missing/unreadable baseline
+(the first run ever, an expired artifact) or an empty join (tables were
+renamed) passes trivially with a "no baseline" note — the gate compares
+runs, it must never block the run that creates the first data point.
+
+Exit codes: 0 ok / no baseline, 1 regression past threshold, 2 bad usage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def load_rows(path: str) -> Optional[Dict[str, float]]:
+    """name → us_per_call from one BENCH artifact; None when the file is
+    missing or unreadable (the no-baseline case, not an error)."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return None
+    out: Dict[str, float] = {}
+    for r in rows:
+        try:
+            out[str(r["name"])] = float(r["us_per_call"])
+        except (KeyError, TypeError, ValueError):
+            continue
+    return out
+
+
+def diff(base: Dict[str, float], cur: Dict[str, float], *,
+         threshold: float = 0.15, min_us: float = 0.0
+         ) -> Tuple[List[tuple], List[tuple]]:
+    """(regressions, improvements) over the shared rows: entries are
+    (name, base_us, cur_us, rel) with rel = (cur-base)/base.  Rows faster
+    than ``min_us`` in BOTH runs are ignored (sub-noise-floor timings
+    regress by large relative factors without meaning anything)."""
+    regressions, improvements = [], []
+    for name in sorted(base.keys() & cur.keys()):
+        b, c = base[name], cur[name]
+        if b <= 0 or (b < min_us and c < min_us):
+            continue
+        rel = (c - b) / b
+        if rel > threshold:
+            regressions.append((name, b, c, rel))
+        elif rel < -threshold:
+            improvements.append((name, b, c, rel))
+    return regressions, improvements
+
+
+def render(entries: List[tuple], label: str) -> str:
+    out = [f"{label} ({len(entries)}):"]
+    for name, b, c, rel in entries:
+        out.append(f"  {name:60s} {b:10.1f} -> {c:10.1f} us "
+                   f"({rel * 100:+.1f}%)")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="previous run's BENCH_*.json")
+    ap.add_argument("current", help="this run's BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated relative slowdown per shared row "
+                         "(0.15 = 15%%)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="ignore rows faster than this in both runs "
+                         "(noise floor)")
+    args = ap.parse_args(argv)
+
+    cur = load_rows(args.current)
+    if cur is None:
+        print(f"[bench_diff] current artifact {args.current!r} is missing "
+              f"or unreadable", file=sys.stderr)
+        return 2
+    base = load_rows(args.baseline)
+    if base is None:
+        print(f"[bench_diff] no baseline at {args.baseline!r} — first run "
+              f"passes trivially")
+        return 0
+    shared = base.keys() & cur.keys()
+    if not shared:
+        print("[bench_diff] no shared rows between baseline and current — "
+              "nothing to gate (tables renamed?)")
+        return 0
+
+    regressions, improvements = diff(base, cur, threshold=args.threshold,
+                                     min_us=args.min_us)
+    print(f"[bench_diff] {len(shared)} shared rows, threshold "
+          f"{args.threshold * 100:.0f}%")
+    if improvements:
+        print(render(improvements, "improvements"))
+    if regressions:
+        print(render(regressions, "REGRESSIONS"), file=sys.stderr)
+        print(f"[bench_diff] FAIL: {len(regressions)} row(s) regressed "
+              f"past {args.threshold * 100:.0f}%", file=sys.stderr)
+        return 1
+    print("[bench_diff] ok: no row regressed past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
