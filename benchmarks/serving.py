@@ -33,13 +33,27 @@ Rows (``name,us_per_call,derived``):
                                 (qwen2 / rwkv6 / recurrentgemma) — kept so
                                 the sequence-model scan kernels retain a
                                 serving-side perf trajectory
+  serve_<backend>_mesh1x1_tok   decode tokens/s on ONE device — the
+                                baseline half of the mesh-scaling pair
+                                (same weights and workload as the row
+                                below)
+  serve_<backend>_mesh<D>x<M>_tok  decode tokens/s across a (data, model)
+                                debug mesh via shard_map; derived carries
+                                the speedup vs the 1x1 row.  Skipped when
+                                the process sees fewer than D·M devices.
 
 The derived column carries tokens/s, DMA count and the bucket histogram —
 ``benchmarks/run.py --json`` additionally snapshots these rows into
 ``BENCH_serve.json`` so the serving perf trajectory accumulates in CI.
+
+Mesh runs: ``python -m benchmarks.serving --mesh 2,2 --json
+BENCH_serve.json`` runs the serving rows ON the mesh plus the scaling
+pair and merges them into an existing BENCH file (CI's mesh job, under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 from __future__ import annotations
 
+import sys
 import time
 from typing import List, Tuple
 
@@ -48,12 +62,14 @@ import jax.numpy as jnp
 
 
 def serve_rows(backend: str = "xla", *, requests: int = 6,
-               gen: int = 6) -> List[Tuple[str, float, str]]:
+               gen: int = 6, mesh: Tuple[int, int] = (1, 1)
+               ) -> List[Tuple[str, float, str]]:
     from repro.core import autotune as AT
     from repro.launch.serve import ServeConfig, SolServer, _smoke_workload
 
     cfg = ServeConfig(d_model=32, n_heads=2, n_layers=1, vocab=64,
-                      max_seq=32, max_batch=4, slots=4, backend=backend)
+                      max_seq=32, max_batch=4, slots=4, backend=backend,
+                      mesh=tuple(mesh))
     prev = AT.get_cache()
     AT.set_cache(AT.AutotuneCache())      # private cache: measure, don't leak
     try:
@@ -70,15 +86,85 @@ def serve_rows(backend: str = "xla", *, requests: int = 6,
                if s["tokens_per_s"] else 0.0)
     step_us = wall_us / max(s["steps"], 1)
     buckets = "/".join(f"{k}:{v}" for k, v in sorted(s["buckets"].items()))
+    # single-device rows keep their historical names so the bench_diff
+    # trajectory is unbroken; mesh runs get their own row series
+    tag = "" if tuple(mesh) == (1, 1) else f"_mesh{mesh[0]}x{mesh[1]}"
     return [
-        (f"serve_{backend}_step", step_us,
+        (f"serve_{backend}{tag}_step", step_us,
          f"{s['tokens_per_s']:.1f}tok/s;dmas={s['dmas']};"
          f"buckets={buckets}"),
-        (f"serve_{backend}_latency_p50", s["latency_ms"]["p50"] * 1e3,
+        (f"serve_{backend}{tag}_latency_p50", s["latency_ms"]["p50"] * 1e3,
          f"{s['requests']}req"),
-        (f"serve_{backend}_latency_p99", s["latency_ms"]["p99"] * 1e3, ""),
-        (f"serve_{backend}_ttft_p50", s["ttft_ms"]["p50"] * 1e3,
+        (f"serve_{backend}{tag}_latency_p99",
+         s["latency_ms"]["p99"] * 1e3, ""),
+        (f"serve_{backend}{tag}_ttft_p50", s["ttft_ms"]["p50"] * 1e3,
          f"prefills={s['prefills']};decodes={s['decodes']}"),
+    ]
+
+
+def mesh_scaling_rows(backend: str = "xla", mesh: Tuple[int, int] = (2, 2),
+                      *, requests: int = 8, gen: int = 24
+                      ) -> List[Tuple[str, float, str]]:
+    """Decode throughput, single device vs a (data, model) debug mesh, on
+    the SAME weights and workload — the tokens/s-scaling rows the PR-7
+    regression gate tracks.  Skips (returns no rows) when the process does
+    not see ``data·model`` devices; CI's mesh job forces host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``.  Both servers
+    share one private autotune cache: the mesh run's per-shard keys carry
+    the mesh tag (``Backend.cache_name``), so warming one never satisfies
+    (or corrupts) the other's strict-provenance audit."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import autotune as AT
+    from repro.launch.serve import ServeConfig, SolServer, build_lm
+
+    need = int(mesh[0]) * int(mesh[1])
+    if need <= 1 or len(jax.devices()) < need:
+        print(f"[serving] mesh_scaling_rows: {need} devices needed, "
+              f"{len(jax.devices())} visible — skipping (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count on CPU)",
+              file=sys.stderr)
+        return []
+
+    base = ServeConfig(d_model=128, n_heads=4, n_layers=2, vocab=128,
+                       max_seq=128, max_batch=8, slots=8, backend=backend)
+    model = build_lm(base)
+    rng = np.random.default_rng(7)
+    workload = [(rng.integers(0, base.vocab, int(rng.integers(4, 8)),
+                              dtype=np.int32), gen)
+                for _ in range(requests)]
+    prev = AT.get_cache()
+    AT.set_cache(AT.AutotuneCache())
+    tps = {}
+    try:
+        for mc in ((1, 1), tuple(mesh)):
+            cfg = dataclasses.replace(base, mesh=mc)
+            server = SolServer(cfg, model, strict_provenance=True)
+            for p, g in workload:          # compile pass: builds buckets
+                server.submit(p, g)
+            server.warm_autotune(warmup=1, iters=3)
+            server.run()
+            toks0 = server.stats["tokens"]
+            t0 = time.perf_counter()
+            for p, g in workload:          # timed pass: warm buckets only
+                server.submit(p, g)
+            server.run()
+            dt = time.perf_counter() - t0
+            tps[mc] = (server.stats["tokens"] - toks0) / dt
+            server.close()
+    finally:
+        AT.set_cache(prev)
+    single = tps[(1, 1)]
+    sharded = tps[tuple(mesh)]
+    speedup = sharded / single if single else 0.0
+    return [
+        (f"serve_{backend}_mesh1x1_tok", 1e6 / single if single else 0.0,
+         f"{single:.1f}tok/s;devices=1"),
+        (f"serve_{backend}_mesh{mesh[0]}x{mesh[1]}_tok",
+         1e6 / sharded if sharded else 0.0,
+         f"{sharded:.1f}tok/s;x{speedup:.2f}_vs_single;devices={need}"),
     ]
 
 
@@ -216,4 +302,55 @@ def decode_bench(archs=("qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b"),
 
 def csv_rows() -> List[Tuple[str, float, str]]:
     return (serve_rows("xla") + decode_vs_reforward("xla")
-            + decode_flatness("xla") + decode_bench())
+            + decode_flatness("xla") + decode_bench()
+            + mesh_scaling_rows("xla"))        # no-op on a single device
+
+
+def main(argv=None) -> int:
+    """Standalone mesh-aware harness: the serving rows (and the
+    single-vs-mesh scaling pair) without the rest of the serving table,
+    so CI's mesh job stays fast.  ``--json`` writes/merges the rows into a
+    BENCH-schema file: existing rows with other names are preserved, so
+    the mesh job can fold its rows into the main run's
+    ``BENCH_serve.json``."""
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL")
+    ap.add_argument("--json", help="write/merge rows into this BENCH file")
+    args = ap.parse_args(argv)
+    mesh = tuple(int(a) for a in args.mesh.split(","))
+    if len(mesh) != 2:
+        print("--mesh wants 'data,model'", file=sys.stderr)
+        return 2
+
+    rows = serve_rows(args.backend, mesh=mesh)
+    if mesh != (1, 1):
+        rows += mesh_scaling_rows(args.backend, mesh)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        doc = {"tables": ["serving"], "rows": []}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    doc = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                pass
+        fresh = {n for n, _, _ in rows}
+        doc["rows"] = ([r for r in doc.get("rows", [])
+                        if r.get("name") not in fresh]
+                       + [{"name": n, "us_per_call": us, "derived": d}
+                          for n, us, d in rows])
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"[serving] wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

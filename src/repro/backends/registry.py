@@ -266,6 +266,23 @@ class Backend:
     # capability set gating shared impls ('pallas' admits the Pallas kernels,
     # 'mxu' the systolic-array matmul path, ...)
     capabilities: frozenset = frozenset({"xla"})
+    # mesh qualifier for the autotune cache (``distributed.sharding.
+    # mesh_backend`` sets it, e.g. "data2model2").  Dispatch-table matching
+    # stays on ``name`` — a mesh view admits exactly the impls the flat
+    # backend does — but every cache read/write goes through ``cache_name``,
+    # so per-shard (post-partition) timings can NEVER collide with
+    # global-shape timings of the flat backend: a local pow2 shape divided
+    # by a pow2 mesh axis lands in some other global bucket, and only the
+    # qualifier keeps those two worlds apart.
+    shard_tag: str = ""
+
+    @property
+    def cache_name(self) -> str:
+        """The autotune-cache backend key: ``name`` on a single device,
+        ``name@shard_tag`` under a mesh — measured timings, pinned Tunable
+        configs and ``strict_provenance`` all key on per-shard shapes via
+        this name, never on the flat backend's global-shape entries."""
+        return f"{self.name}@{self.shard_tag}" if self.shard_tag else self.name
 
     def preferred_layout(self, node: Node) -> str:
         if node.op in (OpKind.LINEAR, OpKind.MATMUL):

@@ -262,6 +262,12 @@ def lower_graph(g: Graph, backend: "registry.Backend") -> Callable[..., Any]:
                 raise ValueError(f"unbound source node {n}")
             vals = [env[id(i)] for i in n.inputs]
             env[id(n)] = impls[id(n)].fn(n, vals, backend)
+            # row-parallel matmuls under shard_map produce partial sums:
+            # shard_graph marks them and the collective lowers here, before
+            # any downstream bias add (BIAS_ADD is its own node)
+            if n.attrs.get("psum_axes"):
+                env[id(n)] = jax.lax.psum(env[id(n)],
+                                          tuple(n.attrs["psum_axes"]))
         outs = tuple(env[id(o)] for o in g.outputs)
         return outs[0] if len(outs) == 1 else outs
 

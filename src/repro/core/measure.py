@@ -142,7 +142,7 @@ def sweep_node(node, vals: Sequence[object], backend, cache, *,
         best = min(results, key=lambda r: r.us)
         nbytes = roundtrip if impl.memory == "roundtrip" else streamed
         cache.record(node.op.value, AT.node_shape(node), node.spec.dtype,
-                     backend.name, impl.name, best.us, config=best.config,
+                     backend.cache_name, impl.name, best.us, config=best.config,
                      flops=flops, nbytes=nbytes, mean_us=best.mean_us)
         out.append(ImplMeasurement(impl.name, best.us, best.config,
                                    len(configs), mean_us=best.mean_us))

@@ -379,7 +379,7 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
         by_name = {c.name: c for c in cands}
         measured = {name: m for name, m in cache.lookup(
             n.op.value, autotune.node_shape(n), n.spec.dtype,
-            backend.name).items() if name in by_name}
+            backend.cache_name).items() if name in by_name}
 
         cfg = None
         if measured:
@@ -390,7 +390,7 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
             cfg = measured[best_name].config
             source = "measured"
         else:
-            cal = cache.calibration(backend.name, n.op.value)
+            cal = cache.calibration(backend.cache_name, n.op.value)
 
             def cost(impl: "R.Impl") -> Tuple[float, int]:
                 nbytes = roundtrip if impl.memory == "roundtrip" else streamed

@@ -149,12 +149,12 @@ def node_rows(graph, backend, cache) -> List[SolRow]:
         bound, dom = sol_bound_us(backend.hw, flops, nbytes)
         shape = autotune.node_shape(n)
         hits, conf = cache.lookup_with_confidence(
-            n.op.value, shape, n.spec.dtype, backend.name)
+            n.op.value, shape, n.spec.dtype, backend.cache_name)
         m = hits.get(impl_name)
         if m is not None:
             us, source, cfg = m.us, "measured", m.config
         else:
-            cal = cache.calibration(backend.name, n.op.value)
+            cal = cache.calibration(backend.cache_name, n.op.value)
             if cal:
                 us = (cal["s_per_flop"] * flops
                       + cal["s_per_byte"] * nbytes) * 1e6
@@ -163,7 +163,7 @@ def node_rows(graph, backend, cache) -> List[SolRow]:
                 us, source, conf, cfg = 0.0, "analytical", "", None
         rows.append(SolRow(
             op=n.op.value, bucket=autotune.bucket_shape(shape or ()),
-            dtype=n.spec.dtype, backend=backend.name, impl=impl_name,
+            dtype=n.spec.dtype, backend=backend.cache_name, impl=impl_name,
             us=us, bound_us=bound,
             ratio=sol_ratio(us, bound) if source != "analytical" else 0.0,
             bottleneck=dom, confidence=conf, source=source, config=cfg,

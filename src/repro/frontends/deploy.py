@@ -50,6 +50,12 @@ def deploy(sol_model: SolModel,
     dtypes, e.g. the decode program's int32 ``lens``) are derived from the
     graph's input nodes — required for multi-input graphs like the serving
     decode program."""
+    if getattr(sol_model, "mesh", None) is not None:
+        raise RuntimeError(
+            "deploy: mesh-compiled SolModels cannot be exported — the "
+            "artifact format stages params onto one device and the graph's "
+            "specs are per-shard local shapes; compile with mesh=None for "
+            "artifact export, or serve the mesh model live")
     g = sol_model.graph
     elections = {
         "elections": dict(getattr(g, "elections", {})),

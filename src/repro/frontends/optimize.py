@@ -27,12 +27,13 @@ from .offload import device as device_api
 class SolModel(nn.Module):
     """The custom model SOL injects into the framework (paper Listing 2)."""
 
-    def __init__(self, source: nn.Module, graph, backend, fn):
+    def __init__(self, source: nn.Module, graph, backend, fn, mesh=None):
         super().__init__()
         self._source = source
         self.graph = graph
         self.backend = backend
         self._fn = fn                      # jit'd whole-graph executable
+        self.mesh = mesh                   # None = single device
         self._ctx_version = -1
         self._ctx_params: Optional[Dict[str, Any]] = None
 
@@ -40,12 +41,22 @@ class SolModel(nn.Module):
         """Offloading context: parameters are cached on the target device and
         re-staged only when the framework-side values change (version bump) —
         the paper's context-caching that limits host↔device memcopies to
-        input/output (Sec. V-A)."""
+        input/output (Sec. V-A).  On a mesh, each parameter is placed with
+        the NamedSharding the rule engine assigned it (column/row TP shards
+        land directly on their owners; replicated params broadcast once)."""
         v = (self._source.version, device_api.state)
         if self._ctx_params is None or self._ctx_version != v:
             sd = self._source.state_dict()
-            self._ctx_params = device_api.stage_params(
-                {k: sd[k] for k in self.graph.params})
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding
+                self._ctx_params = {
+                    k: jax.device_put(
+                        jnp.asarray(sd[k]),
+                        NamedSharding(self.mesh, self.graph.param_specs[k]))
+                    for k in self.graph.params}
+            else:
+                self._ctx_params = device_api.stage_params(
+                    {k: sd[k] for k in self.graph.params})
             self._ctx_version = v
         return self._ctx_params
 
@@ -57,7 +68,13 @@ class SolModel(nn.Module):
 
     def forward(self, *xs) -> Any:
         params = self._params_for_call()
-        staged = [device_api.stage_input(x) for x in xs]
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            staged = [jax.device_put(jnp.asarray(x),
+                                     NamedSharding(self.mesh, spec))
+                      for x, spec in zip(xs, self.graph.input_specs)]
+        else:
+            staged = [device_api.stage_input(x) for x in xs]
         y = self._fn(params, *staged)
         if isinstance(y, tuple):     # multi-output graphs (serving prefill/
             return tuple(device_api.fetch_output(o) for o in y)  # decode)
@@ -147,20 +164,45 @@ def provenance_violations(by_op: Dict[str, Any], prov: Dict[str, Any],
 
 def optimize(model: nn.Module, input_shape: Tuple[int, ...], *,
              backend: str | Backend = "xla", training: bool = False,
-             dtype: str = "float32") -> SolModel:
-    """Extract → optimize → codegen → inject.  ≤1 line for the user."""
+             dtype: str = "float32", mesh=None) -> SolModel:
+    """Extract → optimize → codegen → inject.  ≤1 line for the user.
+
+    With ``mesh`` (a ``jax.sharding.Mesh``) the elected graph compiles
+    under ``shard_map``: the TP/DP rule engine partitions it first
+    (``distributed.sharding.shard_graph``), so the whole pipeline —
+    elections, autotune lookups, Tunable pinning — runs on per-shard
+    shapes."""
     graph = extract(model, input_shape, dtype)
-    return compile_graph(model, graph, backend, training=training)
+    return compile_graph(model, graph, backend, training=training, mesh=mesh)
 
 
 def compile_graph(model: nn.Module, graph, backend: str | Backend = "xla",
-                  *, training: bool = False) -> SolModel:
+                  *, training: bool = False, mesh=None) -> SolModel:
     """Optimize → codegen → inject for a pre-built graph (the serving
     prefill/decode programs come from ``extract_prefill``/``extract_decode``
     rather than the plain ``extract``); the same pipeline and lowering as
-    :func:`optimize`."""
+    :func:`optimize`.
+
+    Mesh mode partitions the graph BEFORE ``run_pipeline`` and qualifies the
+    backend's autotune-cache key (``mesh_backend``), then wraps the lowered
+    executable in ``shard_map`` with the specs the rule engine derived —
+    row-parallel psums lower inside the mapped function (executor), and
+    shard_map's ``out_specs`` express the gathers at the graph edges."""
     bk = backend if isinstance(backend, Backend) else get_backend(backend)
+    if mesh is None:
+        graph = passes.run_pipeline(graph, bk, training=training)
+        raw_fn = lower_graph(graph, bk)
+        return SolModel(model, graph, bk, jax.jit(raw_fn))
+
+    from ..distributed import sharding as shd
+    graph = shd.shard_graph(graph, mesh)
+    bk = shd.mesh_backend(bk, mesh)
     graph = passes.run_pipeline(graph, bk, training=training)
     raw_fn = lower_graph(graph, bk)
-    fn = jax.jit(raw_fn)
-    return SolModel(model, graph, bk, fn)
+    out_specs = (graph.output_specs[0] if len(graph.output_specs) == 1
+                 else tuple(graph.output_specs))
+    sharded = shd.shard_map(
+        raw_fn, mesh=mesh,
+        in_specs=(dict(graph.param_specs), *graph.input_specs),
+        out_specs=out_specs, **shd.SHARD_MAP_NOCHECK)
+    return SolModel(model, graph, bk, jax.jit(sharded), mesh=mesh)

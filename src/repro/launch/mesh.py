@@ -26,6 +26,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over however many devices exist (tests)."""
-    devs = jax.devices()[: data * model]
-    return jax.make_mesh((data, model), ("data", "model"), devices=devs)
+    """Tiny (data, model) mesh for tests and debug serving.  Validates the
+    device count like :func:`make_production_mesh` — a short slice would
+    otherwise hand back a silently smaller mesh and every divisibility
+    decision downstream would be made against the wrong axis sizes."""
+    need = data * model
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {(data, model)} needs {need} devices, have {len(devs)} — "
+            f"run via launch/dryrun.py which forces XLA_FLAGS host device "
+            f"count")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devs[:need])

@@ -191,6 +191,7 @@ class ServeConfig:
     backend: str = "xla"
     seed: int = 0
     decode: bool = True            # incremental KV-cache decode program
+    mesh: Tuple[int, int] = (1, 1)  # (data, model) axes; (1,1) = one device
 
     def __post_init__(self):
         if self.max_seq != AT.ceil_pow2(self.max_seq):
@@ -198,6 +199,9 @@ class ServeConfig:
                              f"two (it is the largest sequence bucket)")
         if self.max_batch < 1 or self.slots < 1:
             raise ValueError("max_batch and slots must be >= 1")
+        if len(self.mesh) != 2 or any(int(a) < 1 for a in self.mesh):
+            raise ValueError(f"mesh {self.mesh} must be two positive axis "
+                             f"sizes (data, model)")
 
 
 def build_lm(cfg: ServeConfig) -> nn.Sequential:
@@ -387,6 +391,27 @@ class SolServer:
         self.backend = get_backend(self.cfg.backend)
         self.strict_provenance = strict_provenance
         self._device = device
+        # mesh mode: one server, many devices — every bucket model compiles
+        # under shard_map and every autotune key carries the mesh tag, so
+        # measured timings / pinned configs / strict provenance all hold on
+        # PER-SHARD shapes (the arena and scheduler stay host-global)
+        self.mesh = None
+        if tuple(self.cfg.mesh) != (1, 1):
+            from ..distributed import sharding as shd
+            from .mesh import make_debug_mesh
+            data_ax, model_ax = (int(a) for a in self.cfg.mesh)
+            self.mesh = make_debug_mesh(data=data_ax, model=model_ax)
+            self.backend = shd.mesh_backend(self.backend, self.mesh)
+            if device is None:
+                # packed DMA staging broadcasts the single buffer to every
+                # shard; SolModel.forward then lays inputs out per-spec
+                self._device = packed.replicated(self.mesh)
+        # smallest batch bucket that still shards the batch dim: smaller
+        # buckets would silently fall back to a replicated batch (no DP)
+        self._min_batch = 1
+        if self.mesh is not None:
+            from ..distributed import sharding as shd
+            self._min_batch = shd.axis_size(self.mesh, shd.dp_axes(self.mesh))
         self.embed = embedding_table(self.cfg)
         self.queue = AsyncQueue()
         self._models: Dict[Tuple, Any] = {}
@@ -623,7 +648,7 @@ class SolServer:
         sb = min(self.cfg.max_seq,
                  max(min(MIN_SEQ_BUCKET, self.cfg.max_seq),
                      AT.ceil_pow2(max_len)))
-        return (AT.ceil_pow2(n_rows), sb)
+        return (AT.ceil_pow2(max(n_rows, self._min_batch)), sb)
 
     def _seq_buckets(self, max_len: int) -> List[int]:
         smax = min(self.cfg.max_seq,
@@ -638,8 +663,8 @@ class SolServer:
 
     def _batch_buckets(self) -> List[int]:
         out = []
-        b = 1
-        while b <= AT.ceil_pow2(self.cfg.max_batch):
+        b = AT.ceil_pow2(self._min_batch)
+        while b <= AT.ceil_pow2(max(self.cfg.max_batch, self._min_batch)):
             out.append(b)
             b *= 2
         return out
@@ -700,17 +725,17 @@ class SolServer:
         program, b, s = key
         if program == "full":
             sol = optimize(self.model, (b, s, self.cfg.d_model),
-                           backend=self.backend)
+                           backend=self.backend, mesh=self.mesh)
         elif program == "prefill":
             sol = compile_graph(
                 self.model,
                 extract_prefill(self.model, (b, s, self.cfg.d_model)),
-                self.backend)
+                self.backend, mesh=self.mesh)
         else:
             sol = compile_graph(
                 self.model,
                 extract_decode(self.model, b, s, self.cfg.d_model),
-                self.backend)
+                self.backend, mesh=self.mesh)
         self._models[key] = self._audit(sol, key)
         return sol
 
@@ -750,7 +775,7 @@ class SolServer:
                 continue
             shape = AT.node_shape(node)
             if not cache.has_bucket(node.op.value, shape, node.spec.dtype,
-                                    self.backend.name):
+                                    self.backend.cache_name):
                 out.append(f"{node.op.value}@{shape}: measured via "
                            f"nearest-bucket fallback, not this bucket")
         return out
@@ -761,6 +786,13 @@ class SolServer:
         come from each program's graph, so the multi-input decode program
         exports the same way the single-input programs do."""
         from ..frontends import deploy as D
+        if self.mesh is not None:
+            raise RuntimeError(
+                "export_artifacts: mesh-compiled bucket models cannot "
+                "round-trip through jax.export + single-device "
+                "DeployedModel staging — serve them live, or compile "
+                "with mesh=(1, 1) for artifact export (per-shard "
+                "artifacts are the serving-fleet step)")
         out = {}
         for key, m in self._models.items():
             if isinstance(m, SolModel):
@@ -789,6 +821,12 @@ class SolServer:
         counts = {"nodes": 0, "impls": 0, "skipped": 0}
         seen = set()
         for g in self._warm_graphs(max_len):
+            if self.mesh is not None:
+                # partition BEFORE the pipeline, exactly like the serving
+                # compile: measurements then key on per-shard shapes (each
+                # timed on one device — the local work a shard executes)
+                from ..distributed import sharding as shd
+                g = shd.shard_graph(g, self.mesh)
             g = passes.run_pipeline(g, self.backend)
             for node in g.topo():
                 if node.op not in SERVED_KINDS:
@@ -799,7 +837,7 @@ class SolServer:
                     continue
                 seen.add(key)
                 if cache.has_bucket(node.op.value, shape, node.spec.dtype,
-                                    self.backend.name):
+                                    self.backend.cache_name):
                     counts["skipped"] += 1
                     continue
                 counts["nodes"] += 1
@@ -826,6 +864,7 @@ class SolServer:
 
         return {
             "mode": "decode" if self.cfg.decode else "reforward",
+            "mesh": list(self.cfg.mesh),
             "requests": len(done),
             "tokens": self.stats["tokens"],
             "tokens_per_s": self.stats["tokens"] / wall if wall else 0.0,
@@ -902,22 +941,37 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--no-decode", action="store_true",
                     help="serve with the full re-forward baseline instead "
                          "of the incremental decode program")
+    ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL",
+                    help="serve across a debug mesh of data,model devices "
+                         "(default 1,1 = single device); needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count "
+                         "on CPU")
     ap.add_argument("--json", help="write the serve summary to this path")
     ap.add_argument("--no-deploy-roundtrip", action="store_true",
                     help="skip the artifact round-trip leg of --smoke")
     args = ap.parse_args(argv)
 
+    try:
+        mesh = tuple(int(a) for a in args.mesh.split(","))
+        if len(mesh) != 2:
+            raise ValueError
+    except ValueError:
+        print(f"--mesh wants 'data,model' (got {args.mesh!r})",
+              file=sys.stderr)
+        return 2
+
     if args.smoke:
         cfg = ServeConfig(d_model=32, n_heads=2, n_layers=1, vocab=64,
                           max_seq=32, max_batch=4, slots=4,
-                          backend=args.backend, decode=not args.no_decode)
+                          backend=args.backend, decode=not args.no_decode,
+                          mesh=mesh)
         args.requests, args.gen = min(args.requests, 6), min(args.gen, 6)
     else:
         cfg = ServeConfig(d_model=args.d_model, n_heads=args.n_heads,
                           n_layers=args.layers, vocab=args.vocab,
                           max_seq=args.max_seq, max_batch=args.max_batch,
                           slots=args.slots, backend=args.backend,
-                          decode=not args.no_decode)
+                          decode=not args.no_decode, mesh=mesh)
 
     server = SolServer(cfg, strict_provenance=True)
     workload = _smoke_workload(cfg, args.requests, args.gen)
@@ -960,7 +1014,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               file=sys.stderr)
         return 1
 
-    if args.smoke and not args.no_deploy_roundtrip:
+    if args.smoke and mesh != (1, 1) and not args.no_deploy_roundtrip:
+        print("[serve] mesh run: skipping the deploy round-trip leg "
+              "(mesh-compiled models are served live, not exported)")
+    elif args.smoke and not args.no_deploy_roundtrip:
         arts = server.export_artifacts()
         replay = SolServer(cfg, deployed=arts, strict_provenance=True)
         reqs = [replay.submit(p, g) for p, g in workload]

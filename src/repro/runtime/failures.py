@@ -7,15 +7,22 @@ loader seeks to the restored step (deterministic stateless pipeline).
 Unit-tested in tests/test_fault_tolerance.py; on a real fleet the failure
 signal comes from the coordination service instead of the simulator.
 
-Serving-fleet role (ROADMAP "Sharded-mesh serving, then a serving
-fleet"): ``run_with_restart`` is also the respawn path for serving
-replicas.  When the straggler monitor (``runtime/straggler.py``) or a
-health check evicts a ``launch/serve.SolServer`` replica, the fleet
-front-end restarts it through the same checkpoint-restore machinery —
-the "state" being the model parameters plus the warmed autotune cache,
-so a respawned replica re-enters strict-provenance serving without
-re-measuring its buckets; in-flight requests on the dead replica are
-re-queued by the router, not recovered here.
+Serving roles, post-mesh (ROADMAP "Sharded-mesh serving, then a serving
+fleet").  Sharded-mesh serving landed: a replica is now a whole
+mesh-wide ``launch/serve.SolServer`` (its shards live or die together —
+a lost device kills the ``shard_map`` step, so shard failure IS replica
+failure), which keeps the failure domain here per-replica, unchanged.
+``run_with_restart`` is the respawn path: when the straggler monitor
+(``runtime/straggler.py``) or a health check evicts a replica, the
+fleet front-end restarts it through the same checkpoint-restore
+machinery — the "state" being the model parameters plus the warmed
+autotune cache, whose entries carry the mesh tag in their backend key
+(``Backend.cache_name``), so a respawned replica re-enters
+strict-provenance serving on the SAME mesh shape without re-measuring
+its buckets (a different mesh shape means cold per-shard keys: re-warm
+before serving); in-flight requests on the dead replica are re-queued
+by the router, not recovered here.  The elastic re-shard path stays
+training-only for now.
 """
 from __future__ import annotations
 

@@ -8,7 +8,16 @@ biases of a model, or a serving request batch) are flattened into ONE
 contiguous staging buffer, moved with a single ``jax.device_put`` (one DMA
 instead of N), and re-sliced on device with zero-copy ``lax.dynamic_slice``
 views.  Below a size threshold the latency-optimized direct path is used —
-exactly the paper's policy split."""
+exactly the paper's policy split.
+
+Mesh serving: every ``device=`` parameter below is a ``jax.device_put``
+target, so it accepts a ``Sharding`` as well as a single device.  The
+mesh-mode server passes ``NamedSharding(mesh, P())`` (see
+:func:`replicated`): the packed buffer broadcasts to every shard as one
+host→device DMA, and the per-spec layout (batch split across ``data``,
+heads across ``model``) happens device-to-device when the sharded
+executable consumes the inputs — host staging stays a single gather
+exactly as on one device."""
 from __future__ import annotations
 
 import dataclasses
@@ -31,6 +40,14 @@ def reset_transfer_stats() -> Dict[str, int]:
     prev = dict(TRANSFER_STATS)
     TRANSFER_STATS.update(packed_dmas=0, direct_dmas=0, bytes=0)
     return prev
+
+
+def replicated(mesh) -> Any:
+    """The mesh-mode staging target: one packed buffer, broadcast to every
+    shard (fully-replicated NamedSharding) — the single-DMA policy's
+    closest analogue when 'the device' is a mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec())
 
 
 @dataclasses.dataclass

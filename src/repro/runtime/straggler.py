@@ -14,12 +14,19 @@ Single-process here: the monitor is driven with recorded per-step times in
 tests; on a real fleet the times come from each host's step clock via the
 coordination service.
 
-Serving-fleet role (ROADMAP "Sharded-mesh serving, then a serving
-fleet"): the same monitor is the per-replica health watcher for a fleet
-of ``launch/serve.SolServer`` replicas.  A replica's step time (or
-token latency) feeds ``record_step``; ``rebalance`` maps to draining the
-flagged replica's share of the request router, and ``evict`` maps to
-drain → evict → respawn through the restart path in
+Serving roles, post-mesh (ROADMAP "Sharded-mesh serving, then a serving
+fleet").  Sharded-mesh serving landed: one ``launch/serve.SolServer``
+now spans a (data, model) mesh, and its ``shard_map`` step is synchronous
+— the slowest SHARD gates every scheduler tick, exactly the SPMD
+straggler shape above.  Within one mesh-wide server the monitor watches
+per-shard step clocks: ``rebalance`` has no in-server analogue (TP/DP
+shard sizes are fixed by the rule engine's divisibility guards), so a
+persistently slow shard escalates straight to ``evict`` = recompiling
+the bucket models on a smaller debug mesh.  Across the FUTURE fleet of
+such servers, the monitor is the per-replica health watcher: a replica's
+step time (or token latency) feeds ``record_step``; ``rebalance`` maps
+to draining the flagged replica's share of the request router, and
+``evict`` maps to drain → evict → respawn through the restart path in
 ``runtime/failures.py``.  Nothing here assumes training: the signal is
 "one participant is slower than the fleet", whichever loop produces it.
 """

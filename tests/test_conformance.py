@@ -33,6 +33,8 @@ TOLERANCE = {
     "linear":     {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "matmul":     {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "attention":  {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
+    "attention_tp_shard": {"float32": (1e-5, 1e-5),
+                           "bfloat16": (3e-2, 3e-2)},
     "decode_attention": {"float32": (1e-5, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "rglru_scan": {"float32": (1e-4, 1e-5), "bfloat16": (3e-2, 3e-2)},
     "rwkv6_scan": {"float32": (1e-4, 1e-5), "bfloat16": (5e-2, 5e-2)},
@@ -71,6 +73,26 @@ def _case_matmul(dtype):
 def _case_attention(dtype):
     from repro.kernels.flash_attention.ref import flash_attention_ref
     b, s, h, hd = 1, 64, 2, 16
+    q, k, v = (_arr((b, s, h, hd), dtype) for _ in range(3))
+    node = Node(OpKind.ATTENTION,
+                [ir.input_node((b, s, h, hd), dtype) for _ in range(3)],
+                TensorSpec((b, s, h, hd), dtype), attrs={"causal": True})
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    return node, [q, k, v], ref
+
+
+def _case_attention_tp_shard(dtype):
+    """The PER-SHARD attention problem a ``model=2`` mesh shard executes
+    for the ``_case_attention`` family: heads are split across the model
+    axis, so each shard runs the same kernel on h=1 of the 2-head global
+    problem (see distributed/sharding.py).  Keeping this in the matrix pins
+    every attention impl on the head-local shapes the sharded serving path
+    actually dispatches — which sit in different autotune buckets than the
+    global shapes."""
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    b, s, h, hd = 1, 64, 1, 16            # h = 2 heads / model axis of 2
     q, k, v = (_arr((b, s, h, hd), dtype) for _ in range(3))
     node = Node(OpKind.ATTENTION,
                 [ir.input_node((b, s, h, hd), dtype) for _ in range(3)],
@@ -183,6 +205,7 @@ CASES = {
     "linear": _case_linear,
     "matmul": _case_matmul,
     "attention": _case_attention,
+    "attention_tp_shard": _case_attention_tp_shard,
     "decode_attention": _case_decode_attention,
     "rglru_scan": _case_rglru_scan,
     "rwkv6_scan": _case_rwkv6_scan,
@@ -234,6 +257,7 @@ def test_matrix_covers_every_kernel_family():
     case_kinds = {
         "linear": OpKind.LINEAR, "matmul": OpKind.MATMUL,
         "attention": OpKind.ATTENTION,
+        "attention_tp_shard": OpKind.ATTENTION,
         "decode_attention": OpKind.DECODE_ATTENTION,
         "rglru_scan": OpKind.RGLRU_SCAN,
         "rwkv6_scan": OpKind.RWKV6_SCAN, "fused": OpKind.FUSED,
