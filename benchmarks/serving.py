@@ -41,6 +41,14 @@ Rows (``name,us_per_call,derived``):
                                 debug mesh via shard_map; derived carries
                                 the speedup vs the 1x1 row.  Skipped when
                                 the process sees fewer than D·M devices.
+  serve_<backend>_fleet<R>_*    open-loop replay of >=1000 requests
+                                against an R-replica SolFleet with ONE
+                                injected replica kill (``fleet`` mode):
+                                us/token, latency p50/p99, TTFT p50 and
+                                the kill→respawn recovery time; the run
+                                fails loudly on any dropped request or
+                                any token diverging from an undisturbed
+                                same-seed replay.
 
 The derived column carries tokens/s, DMA count and the bucket histogram —
 ``benchmarks/run.py --json`` additionally snapshots these rows into
@@ -165,6 +173,108 @@ def mesh_scaling_rows(backend: str = "xla", mesh: Tuple[int, int] = (2, 2),
         (f"serve_{backend}_mesh{mesh[0]}x{mesh[1]}_tok",
          1e6 / sharded if sharded else 0.0,
          f"{sharded:.1f}tok/s;x{speedup:.2f}_vs_single;devices={need}"),
+    ]
+
+
+def fleet_rows(backend: str = "xla", *, replicas: int = 3,
+               requests: int = 1000, gen: int = 4, rate: int = 3,
+               kill_at_tick: int = 150, verify: bool = True
+               ) -> List[Tuple[str, float, str]]:
+    """Open-loop traffic replay against a ``launch/fleet.SolFleet`` with
+    ONE injected replica kill mid-replay: ``rate`` requests arrive per
+    watcher tick regardless of completions (open loop — queueing delay is
+    visible in the latency rows, not hidden by flow control).  The
+    default ``rate`` sits just under fleet capacity (~R·max_batch/(gen+1)
+    requests/tick) so the latency rows measure service + moderate
+    queueing, not an unbounded backlog.  Every
+    request must complete with zero drops, and with ``verify`` the token
+    output is checked identical to an undisturbed same-seed run on the
+    same weights (the re-queue determinism claim, measured at scale).
+
+    Rows (merged into BENCH_serve.json under the bench_diff gate):
+
+      serve_<backend>_fleet<R>_tok          us/token across the fleet
+      serve_<backend>_fleet<R>_latency_p50  request latency (us)
+      serve_<backend>_fleet<R>_latency_p99
+      serve_<backend>_fleet<R>_ttft_p50     time-to-first-token (us)
+      serve_<backend>_fleet<R>_recovery     injected kill → respawn (us)
+    """
+    import numpy as np
+
+    from repro.core import autotune as AT
+    from repro.launch.fleet import FleetConfig, SolFleet
+    from repro.launch.serve import (SamplingParams, ServeConfig, build_lm)
+
+    cfg = ServeConfig(d_model=32, n_heads=2, n_layers=1, vocab=64,
+                      max_seq=32, max_batch=8, slots=16, backend=backend)
+    model = build_lm(cfg)
+    rng = np.random.default_rng(11)
+    workload = [(rng.integers(0, cfg.vocab, int(rng.integers(4, 12)),
+                              dtype=np.int32), gen,
+                 SamplingParams(temperature=0.8, seed=10_000 + i))
+                for i in range(requests)]
+
+    def replay(n_replicas: int, kill: bool):
+        # fixed-size fleet (min == max): the recovery row must measure the
+        # kill → respawn path, not autoscaler drift, and the 1-replica
+        # verification baseline must stay truly single-replica
+        fleet = SolFleet(cfg, FleetConfig(
+            n_replicas=n_replicas, min_replicas=n_replicas,
+            max_replicas=n_replicas),
+            model=model)
+        reqs, i, killed = [], 0, None
+        while i < len(workload) or any(fr.generated is None
+                                       for fr in reqs):
+            for _ in range(rate):
+                if i < len(workload):
+                    p, g, sp = workload[i]
+                    reqs.append(fleet.submit(p, g, sampling=sp))
+                    i += 1
+            if kill and killed is None and fleet.stats["ticks"] >= \
+                    kill_at_tick:
+                killed = fleet.kill()
+            fleet.tick()
+        s = fleet.summary()
+        fleet.close()
+        return reqs, s, killed
+
+    prev = AT.get_cache()
+    AT.set_cache(AT.AutotuneCache())   # private cache: measure, don't leak
+    try:
+        reqs, s, killed = replay(replicas, kill=True)
+        dropped = [fr.fid for fr in reqs if fr.generated is None]
+        if dropped:
+            raise RuntimeError(f"fleet replay dropped requests {dropped} "
+                               f"after the injected kill")
+        ident = ""
+        if verify:
+            base_reqs, _, _ = replay(1, kill=False)
+            diverged = [fr.fid for fr, b in zip(reqs, base_reqs)
+                        if fr.generated != b.generated]
+            if diverged:
+                raise RuntimeError(
+                    f"fleet replay token output diverged from the "
+                    f"undisturbed same-seed run for {diverged}")
+            ident = ";identical=yes"
+    finally:
+        AT.set_cache(prev)
+
+    tag = f"fleet{replicas}"
+    tok_us = (1e6 / s["tokens_per_s"]) if s["tokens_per_s"] else 0.0
+    recovery_us = s["recovery_s"]["max"] * 1e6
+    return [
+        (f"serve_{backend}_{tag}_tok", tok_us,
+         f"{s['tokens_per_s']:.1f}tok/s;requests={s['requests']};"
+         f"requeued={s['requeued']}{ident}"),
+        (f"serve_{backend}_{tag}_latency_p50",
+         s["latency_ms"]["p50"] * 1e3, f"open_loop_rate={rate}/tick"),
+        (f"serve_{backend}_{tag}_latency_p99",
+         s["latency_ms"]["p99"] * 1e3, ""),
+        (f"serve_{backend}_{tag}_ttft_p50", s["ttft_ms"]["p50"] * 1e3,
+         f"replicas={replicas}"),
+        (f"serve_{backend}_{tag}_recovery", recovery_us,
+         f"killed_replica={killed};kill_tick={kill_at_tick};"
+         f"respawns={s['respawns']}"),
     ]
 
 
@@ -307,19 +417,29 @@ def csv_rows() -> List[Tuple[str, float, str]]:
 
 
 def main(argv=None) -> int:
-    """Standalone mesh-aware harness: the serving rows (and the
-    single-vs-mesh scaling pair) without the rest of the serving table,
-    so CI's mesh job stays fast.  ``--json`` writes/merges the rows into a
-    BENCH-schema file: existing rows with other names are preserved, so
-    the mesh job can fold its rows into the main run's
+    """Standalone mesh/fleet-aware harness: the serving rows (or, with the
+    ``fleet`` mode, the open-loop fleet-replay rows with one injected
+    kill) without the rest of the serving table, so CI's dedicated jobs
+    stay fast.  ``--json`` writes/merges the rows into a BENCH-schema
+    file: existing rows with other names are preserved, so the mesh and
+    fleet jobs can fold their rows into the main run's
     ``BENCH_serve.json``."""
     import argparse
     import json
     import os
 
     ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("mode", nargs="?", default="serve",
+                    choices=["serve", "fleet"],
+                    help="'serve': single-server rows (default); 'fleet': "
+                         "open-loop replica-fleet replay with one "
+                         "injected kill")
     ap.add_argument("--backend", default="xla")
     ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL")
+    ap.add_argument("--replicas", type=int, default=3,
+                    help="fleet mode: replica count")
+    ap.add_argument("--requests", type=int, default=1000,
+                    help="fleet mode: open-loop replay size")
     ap.add_argument("--json", help="write/merge rows into this BENCH file")
     args = ap.parse_args(argv)
     mesh = tuple(int(a) for a in args.mesh.split(","))
@@ -327,9 +447,13 @@ def main(argv=None) -> int:
         print("--mesh wants 'data,model'", file=sys.stderr)
         return 2
 
-    rows = serve_rows(args.backend, mesh=mesh)
-    if mesh != (1, 1):
-        rows += mesh_scaling_rows(args.backend, mesh)
+    if args.mode == "fleet":
+        rows = fleet_rows(args.backend, replicas=args.replicas,
+                          requests=args.requests)
+    else:
+        rows = serve_rows(args.backend, mesh=mesh)
+        if mesh != (1, 1):
+            rows += mesh_scaling_rows(args.backend, mesh)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,585 @@
+"""Serving fleet: N replica ``SolServer``s behind a request router with a
+watcher-driven replica lifecycle (drain / evict / respawn / autoscale).
+
+One ``SolServer`` is one *replica* — possibly a whole (data, model) mesh
+(``ServeConfig.mesh``), whose shards live or die together, so the failure
+domain is always the replica.  :class:`SolFleet` turns N of them into one
+front-end in the aws-parallelcluster watcher idiom (nodewatcher /
+sqswatcher: a periodic tick observes members, applies a membership
+policy, and converges the fleet toward the desired size):
+
+* **Router** — ``submit`` parks requests in a fleet-level queue;
+  ``tick`` dispatches them to the replica with the lowest score, a
+  combination of queue depth (in-flight / slots) and a per-replica
+  TTFT EWMA, so slow replicas organically receive less traffic.
+* **Watcher tick** — every tick steps each live replica and feeds its
+  step clock into ``runtime/straggler.StragglerMonitor.record_step``.
+  A ``rebalance`` verdict drains the replica's router share (no new
+  traffic; after ``drain_cooldown`` ticks its monitor id is ``retire``d
+  — fresh stats — and it rejoins).  An ``evict`` verdict drains, then
+  evicts and respawns: drain → evict → respawn.  Two guards keep the
+  health signal honest on a real clock: a replica's first
+  ``join_grace`` serving steps are bucket-compile warmup and are not
+  judged (the nodewatcher idiom of not health-checking a node still
+  bootstrapping), and each step clock is clamped to ``spike_clip ×``
+  the fleet baseline before recording, so a one-off compile/GC spike
+  cannot trip an evict while a genuinely slow replica's EWMA still
+  converges past the threshold.
+* **Respawn** — replacement replicas come up through
+  ``runtime/failures.run_with_restart``: the step function rebuilds the
+  model from checkpointed params (``CheckpointManager`` restore on an
+  injected/real bring-up failure) and the warmed autotune cache is
+  process-wide, keyed on the mesh-tagged ``Backend.cache_name`` — so a
+  replica respawned onto the same mesh shape re-enters
+  ``strict_provenance`` serving without re-measuring a single bucket.
+  Respawned replicas get FRESH ids, never reused: the straggler monitor
+  auto-registers the new id and the old id was retired with the corpse.
+* **Re-queue semantics** — when a replica dies (a restartable exception
+  out of its step — :class:`ReplicaFailure` by default), its in-flight
+  requests go back to the FRONT of the router queue carrying their
+  original ``SamplingParams``.  Sampling is a pure function of
+  (logits stream, seed) and every replica serves identical weights, so
+  the re-run regenerates the identical token stream: completed output is
+  token-identical to an undisturbed run, partial pre-kill output is
+  discarded, nothing is dropped.
+* **Autoscaling** — admission pressure: a fleet backlog above
+  ``scale_up_backlog ×`` live capacity for ``scale_up_ticks`` ticks
+  spawns a replica (up to ``max_replicas``); a sustained empty backlog
+  with spare capacity retires the least-loaded replica gracefully
+  (drain, then close) down to ``min_replicas``.
+* **Fault injection** — a ``runtime/failures.FailureSimulator`` threads
+  end-to-end: ``SolFleet(failure_sim=...)`` checks it each tick inside
+  each replica's step scope (a scheduled tick kills the first live
+  replica stepped that tick), and ``kill()`` injects a death directly.
+  ``benchmarks/serving.py fleet`` replays an open-loop workload through
+  this with one injected kill and records recovery time.
+
+Single-process and cooperative: ``tick()`` runs every replica's scheduler
+step inline, which keeps tests deterministic; on a real fleet the same
+policy loop runs against remote step clocks.  Smoke run (what CI
+executes): ``python -m repro.launch.serve --smoke --fleet 3``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from collections import deque
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager, save_checkpoint
+from ..runtime.failures import (FailureSimulator, ReplicaFailure,
+                                run_with_restart)
+from ..runtime.straggler import StragglerMonitor
+from .serve import (Request, SamplingParams, ServeConfig, SolServer,
+                    build_lm, validate_prompt)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet sizing + watcher/router/autoscaler policy knobs."""
+
+    n_replicas: int = 3            # desired size at bootstrap
+    min_replicas: int = 1
+    max_replicas: int = 8
+    # router
+    ttft_alpha: float = 0.2        # per-replica TTFT EWMA smoothing
+    # straggler watcher (feeds runtime/straggler.StragglerMonitor)
+    alpha: float = 0.2
+    threshold: float = 2.0
+    evict_threshold: float = 4.0
+    warmup_steps: int = 10
+    join_grace: int = 5            # a fresh replica's first serving steps
+    #                                are compile warmup — not health-judged
+    spike_clip: float = 5.0        # clamp a step clock to clip × the
+    #                                FLEET baseline before the monitor
+    drain_cooldown: int = 8        # ticks a rebalance-drain lasts
+    drain_grace: int = 16          # ticks an evict-drain may take before
+    #                                resident requests are re-queued
+    # autoscaling: admission pressure on the fleet queue
+    scale_up_backlog: float = 1.0  # backlog > factor·live·slots → pressure
+    scale_up_ticks: int = 3
+    scale_down_ticks: int = 10
+    max_restarts: int = 10         # respawn retries (run_with_restart)
+
+    def __post_init__(self):
+        if not (1 <= self.min_replicas <= self.n_replicas
+                <= self.max_replicas):
+            raise ValueError(
+                f"need 1 <= min_replicas <= n_replicas <= max_replicas, "
+                f"got {self.min_replicas}/{self.n_replicas}/"
+                f"{self.max_replicas}")
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """The router-level handle: survives replica death (the per-replica
+    ``Request`` handle is replaced on re-queue, the fleet one persists)."""
+
+    fid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    sampling: SamplingParams
+    submitted: float
+    replica: Optional[int] = None            # current replica id
+    handle: Optional[Request] = None         # replica-level request
+    generated: Optional[List[int]] = None    # set on completion
+    requeues: int = 0
+    first_token_time: Optional[float] = None
+    finished_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.generated is not None
+
+
+@dataclasses.dataclass
+class Replica:
+    """One fleet member.  ``id`` is fleet-unique and never reused — a
+    respawn is a NEW member (fresh straggler stats, fresh server)."""
+
+    id: int
+    server: SolServer
+    state: str = "up"              # up | draining | retiring
+    drain_reason: str = ""         # rebalance | evict (while draining)
+    drained_at: int = 0            # tick the drain started
+    ttft_ewma: float = 0.0         # replica-local TTFT (router signal)
+    serving_steps: int = 0         # steps that actually served work
+    served: int = 0                # fleet requests completed here
+    assigned: Dict[int, FleetRequest] = dataclasses.field(
+        default_factory=dict)
+
+
+class SolFleet:
+    """N ``SolServer`` replicas, one router, one watcher loop."""
+
+    def __init__(self, cfg: Optional[ServeConfig] = None,
+                 fleet: Optional[FleetConfig] = None, *,
+                 model=None,
+                 strict_provenance: bool = False,
+                 failure_sim: Optional[FailureSimulator] = None,
+                 respawn_sim: Optional[FailureSimulator] = None,
+                 restartable: Optional[
+                     Callable[[BaseException], bool]] = None,
+                 ckpt_dir: Optional[str] = None,
+                 step_time_fn: Optional[
+                     Callable[[Replica, float], float]] = None):
+        self.cfg = cfg or ServeConfig()
+        self.fleet_cfg = fleet or FleetConfig()
+        self.strict_provenance = strict_provenance
+        self.failure_sim = failure_sim
+        self.respawn_sim = respawn_sim
+        self._restartable = restartable or (
+            lambda e: isinstance(e, ReplicaFailure))
+        # test/benchmark hook: transform a replica's measured step clock
+        # before it reaches the monitor (e.g. inflate one replica to force
+        # a straggler verdict deterministically)
+        self._step_time_fn = step_time_fn
+        # fleet-shared weights: every replica (and every respawn) loads
+        # THIS state dict, which is what makes re-queued requests
+        # token-identical wherever they land
+        src = model if model is not None else build_lm(self.cfg)
+        self._params = {k: np.asarray(v)
+                        for k, v in src.state_dict().items()}
+        self._ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="sol_fleet_")
+        save_checkpoint(self._ckpt_dir, 0, self._params)
+        # interval is effectively ∞: run_with_restart's post-step
+        # maybe_save must never try to serialize a live server object —
+        # the params checkpoint written above is the restore source
+        self._ckpt = CheckpointManager(self._ckpt_dir, interval=1 << 30,
+                                       keep=2)
+        f = self.fleet_cfg
+        self.monitor = StragglerMonitor(
+            0, alpha=f.alpha, threshold=f.threshold,
+            evict_threshold=f.evict_threshold,
+            warmup_steps=f.warmup_steps)
+        self.replicas: Dict[int, Replica] = {}
+        self._next_replica = 0
+        self._desired = f.n_replicas
+        self.pending: Deque[FleetRequest] = deque()
+        self._requests: List[FleetRequest] = []
+        self._next_fid = 0
+        self._tick = 0
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._pressure_up = 0
+        self._pressure_down = 0
+        self.events: List[Dict[str, Any]] = []
+        self.stats = {"ticks": 0, "kills": 0, "respawns": 0,
+                      "requeued": 0, "evicted": 0, "drained": 0,
+                      "rejoined": 0, "scale_ups": 0, "scale_downs": 0}
+        for _ in range(f.n_replicas):
+            self._spawn(reason="bootstrap")
+
+    # -- membership ----------------------------------------------------------
+
+    def _build_server(self, step: int, params) -> SolServer:
+        """The respawn step function (``run_with_restart``): params in,
+        audited replica server out.  A bring-up failure restores params
+        from the fleet checkpoint and retries; the autotune cache needs no
+        restore — it is process-wide and keyed on the mesh-tagged
+        ``Backend.cache_name``, so strict provenance holds without
+        re-measuring."""
+        m = build_lm(self.cfg)
+        m.load_state_dict(params)
+        return SolServer(self.cfg, m,
+                         strict_provenance=self.strict_provenance)
+
+    def _spawn(self, *, reason: str) -> Replica:
+        server, report = run_with_restart(
+            self._build_server, self._params, 1, self._ckpt,
+            failure_sim=None if reason == "bootstrap" else self.respawn_sim,
+            max_restarts=self.fleet_cfg.max_restarts,
+            restartable=self._restartable)
+        rid = self._next_replica
+        self._next_replica += 1
+        rep = Replica(id=rid, server=server)
+        self.replicas[rid] = rep
+        self._event("spawn" if reason == "bootstrap" else "respawn",
+                    replica=rid, reason=reason, restarts=report.restarts)
+        if reason != "bootstrap":
+            self.stats["respawns"] += 1
+        return rep
+
+    def _remove(self, rep: Replica, *, event: str, **kw) -> None:
+        """Common corpse-handling: monitor id retired (stale EWMA must not
+        skew the fleet baseline), server closed, membership dropped."""
+        self.monitor.retire(rep.id)
+        try:
+            rep.server.close()
+        except Exception:
+            pass                     # a dead replica's queue may be broken
+        self.replicas.pop(rep.id, None)
+        self._event(event, replica=rep.id, **kw)
+
+    def _on_replica_failure(self, rep: Replica, err: BaseException) -> None:
+        """Replica death: re-queue its in-flight requests at the front of
+        the router queue (original ``SamplingParams`` seeds → the re-run
+        is token-identical), then drop the corpse.  The watcher phase of
+        the next tick respawns up to the desired size."""
+        self.stats["kills"] += 1
+        self._requeue_in_flight(rep)
+        self._remove(rep, event="kill", error=type(err).__name__)
+
+    def _requeue_in_flight(self, rep: Replica) -> None:
+        live = [f for f in rep.assigned.values() if not f.done]
+        for freq in sorted(live, key=lambda f: f.fid, reverse=True):
+            freq.handle = None
+            freq.replica = None
+            freq.requeues += 1
+            self.stats["requeued"] += 1
+            self.pending.appendleft(freq)
+            self._event("requeue", fid=freq.fid, from_replica=rep.id)
+        rep.assigned.clear()
+
+    def kill(self, replica_id: Optional[int] = None, *,
+             error: Optional[BaseException] = None) -> int:
+        """Fault injection: kill one replica (default: the busiest) as if
+        its mesh step had raised.  Used by the ``--fleet`` smoke and the
+        benchmark's injected-kill replay."""
+        if replica_id is not None:
+            rep = self.replicas.get(replica_id)
+        else:
+            rep = max(self.replicas.values(),
+                      key=lambda r: (r.server.depth, -r.id), default=None)
+        if rep is None:
+            raise ValueError(f"no replica to kill (id={replica_id})")
+        rid = rep.id
+        self._on_replica_failure(rep, error
+                                 or ReplicaFailure("injected kill"))
+        return rid
+
+    # -- router --------------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               sampling: Optional[SamplingParams] = None) -> FleetRequest:
+        prompt = validate_prompt(self.cfg, prompt)
+        freq = FleetRequest(fid=self._next_fid, prompt=prompt,
+                            max_new_tokens=max(1, int(max_new_tokens)),
+                            sampling=sampling or SamplingParams(),
+                            submitted=time.perf_counter())
+        self._next_fid += 1
+        self._requests.append(freq)
+        self.pending.append(freq)
+        return freq
+
+    def _routable(self) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.state == "up"]
+
+    def router_score(self, rep: Replica) -> float:
+        """Lower is better: normalized queue depth plus the replica's
+        TTFT-EWMA excess over the fastest replica's — a straggler that the
+        monitor has not yet flagged already gets organically less
+        traffic."""
+        depth = rep.server.depth / max(1, self.cfg.slots)
+        ewmas = [r.ttft_ewma for r in self._routable() if r.ttft_ewma > 0]
+        base = min(ewmas) if ewmas else 0.0
+        ttft = (rep.ttft_ewma / base - 1.0) \
+            if base > 0 and rep.ttft_ewma > 0 else 0.0
+        return depth + ttft
+
+    def _route(self) -> None:
+        while self.pending:
+            cands = [r for r in self._routable()
+                     if r.server.depth < self.cfg.slots]
+            if not cands:
+                return               # saturated: backlog = admission pressure
+            rep = min(cands, key=lambda r: (self.router_score(r), r.id))
+            freq = self.pending.popleft()
+            freq.handle = rep.server.submit(freq.prompt,
+                                            freq.max_new_tokens,
+                                            sampling=freq.sampling)
+            freq.replica = rep.id
+            rep.assigned[freq.fid] = freq
+
+    def _harvest(self, rep: Replica) -> None:
+        f = self.fleet_cfg
+        for fid in list(rep.assigned):
+            freq = rep.assigned[fid]
+            h = freq.handle
+            if (freq.first_token_time is None
+                    and h.first_token_time is not None):
+                freq.first_token_time = h.first_token_time
+                # replica-LOCAL ttft (replica submit → first token) is the
+                # router's speed signal, unpolluted by fleet queueing
+                local = h.first_token_time - h.submitted
+                rep.ttft_ewma = local if rep.ttft_ewma == 0 else \
+                    (1 - f.ttft_alpha) * rep.ttft_ewma + f.ttft_alpha * local
+            if h.done:
+                freq.generated = list(h.generated)
+                freq.finished_time = h.finished_time
+                rep.served += 1
+                del rep.assigned[fid]
+
+    # -- the watcher tick ----------------------------------------------------
+
+    def tick(self) -> List[int]:
+        """One watcher tick: route → step every replica (its step clock
+        feeds the straggler monitor; a restartable exception is replica
+        death) → harvest → membership policy (drain/evict/respawn) →
+        autoscale.  Returns the ids of replicas that served work."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._tick += 1
+        self.stats["ticks"] += 1
+        self._route()
+        f = self.fleet_cfg
+        times: Dict[int, float] = {}
+        stepped: List[int] = []
+        for rep in list(self.replicas.values()):
+            t0 = time.perf_counter()
+            try:
+                if self.failure_sim is not None:
+                    # a tick scheduled in the simulator kills the first
+                    # replica whose step scope checks it (ids ascend)
+                    self.failure_sim.check(self._tick)
+                served = rep.server.step()
+            except Exception as e:
+                if not self._restartable(e):
+                    raise
+                self._on_replica_failure(rep, e)
+                continue
+            if served:
+                dt = time.perf_counter() - t0
+                if self._step_time_fn is not None:
+                    dt = self._step_time_fn(rep, dt)
+                rep.serving_steps += 1
+                stepped.append(rep.id)
+                if rep.serving_steps > f.join_grace:
+                    # spike clip vs the FLEET baseline: no single sample
+                    # may record above clip × fleet-normal, so a one-off
+                    # compile/GC spike cannot trip an evict (one clamped
+                    # sample moves the EWMA to at most 1 + α(clip-1) ×
+                    # baseline, under the rebalance threshold) while a
+                    # genuine straggler's EWMA still converges to its
+                    # clamped ratio and crosses ``evict_threshold``.
+                    base = self.monitor.baseline()
+                    if f.spike_clip > 0 and base > 0:
+                        dt = min(dt, f.spike_clip * base)
+                    times[rep.id] = dt
+            self._harvest(rep)
+        if times:
+            # idle replicas contribute no sample: a drained replica's ~0s
+            # no-op step must not make busy replicas look like stragglers
+            self.monitor.record_step(times)
+        self._apply_watcher_policy()
+        self._autoscale()
+        self._t_last = time.perf_counter()
+        return stepped
+
+    def _apply_watcher_policy(self) -> None:
+        f = self.fleet_cfg
+        flags = self.monitor.flagged()
+        for rep in list(self.replicas.values()):
+            verdict = flags.get(rep.id)
+            if rep.state == "up" and verdict in ("rebalance", "evict"):
+                rep.state = "draining"
+                rep.drain_reason = verdict
+                rep.drained_at = self._tick
+                self.stats["drained"] += 1
+                self._event("drain", replica=rep.id, verdict=verdict)
+            elif (rep.state == "draining"
+                    and rep.drain_reason == "rebalance"):
+                if verdict == "evict":
+                    rep.drain_reason = "evict"   # escalate mid-drain
+                    self._event("drain", replica=rep.id, verdict="evict")
+                elif self._tick - rep.drained_at >= f.drain_cooldown:
+                    # second chance: rejoin under FRESH monitor stats
+                    # (retire + auto-register) — if it is still slow it
+                    # will be re-flagged after warmup_steps samples
+                    self.monitor.retire(rep.id)
+                    rep.state, rep.drain_reason = "up", ""
+                    self.stats["rejoined"] += 1
+                    self._event("rejoin", replica=rep.id)
+            if rep.state == "draining" and rep.drain_reason == "evict":
+                drained = rep.server.depth == 0
+                if drained or self._tick - rep.drained_at >= f.drain_grace:
+                    if not drained:      # grace expired: re-queue the rest
+                        self._requeue_in_flight(rep)
+                    self.stats["evicted"] += 1
+                    self._remove(rep, event="evict", drained=drained)
+            elif rep.state == "retiring" and rep.server.depth == 0:
+                self._remove(rep, event="retire")
+        # converge membership toward the desired size (replaces dead and
+        # evicted replicas; retiring ones no longer count)
+        while len([r for r in self.replicas.values()
+                   if r.state != "retiring"]) < self._desired:
+            self._spawn(reason="replace")
+
+    def _autoscale(self) -> None:
+        """Admission-pressure policy: the fleet queue is what requests
+        wait in when every routable replica is slot-saturated, so its
+        sustained depth is the scale-up signal; a sustained empty queue
+        with spare slot capacity scales down."""
+        f = self.fleet_cfg
+        live = self._routable()
+        capacity = max(1, len(live)) * self.cfg.slots
+        backlog = len(self.pending)
+        in_flight = sum(r.server.depth for r in live)
+        if backlog > f.scale_up_backlog * capacity:
+            self._pressure_up += 1
+            self._pressure_down = 0
+        elif (backlog == 0 and len(live) > 1
+                and in_flight <= (len(live) - 1) * self.cfg.slots // 2):
+            self._pressure_down += 1
+            self._pressure_up = 0
+        else:
+            self._pressure_up = self._pressure_down = 0
+        if (self._pressure_up >= f.scale_up_ticks
+                and self._desired < f.max_replicas):
+            self._desired += 1
+            self._pressure_up = 0
+            self.stats["scale_ups"] += 1
+            self._event("scale_up", desired=self._desired)
+            self._spawn(reason="autoscale")
+        if (self._pressure_down >= f.scale_down_ticks
+                and self._desired > f.min_replicas and live):
+            self._desired -= 1
+            self._pressure_down = 0
+            self.stats["scale_downs"] += 1
+            victim = min(live, key=lambda r: (r.server.depth, -r.id))
+            victim.state = "retiring"
+            self._event("scale_down", replica=victim.id,
+                        desired=self._desired)
+
+    # -- driving -------------------------------------------------------------
+
+    def run(self, max_ticks: int = 100_000) -> Dict[str, Any]:
+        """Tick until every submitted request has completed."""
+        start = self._tick
+        while self.pending or any(r.assigned
+                                  for r in self.replicas.values()):
+            if self._tick - start >= max_ticks:
+                raise RuntimeError(f"fleet exceeded {max_ticks} ticks with "
+                                   f"requests still in flight")
+            self.tick()
+        return self.summary()
+
+    def close(self) -> None:
+        for rep in list(self.replicas.values()):
+            try:
+                rep.server.close()
+            except Exception:
+                pass
+        self.replicas.clear()
+
+    def warm_autotune(self, max_len: Optional[int] = None, *,
+                      warmup: int = 1, iters: int = 3) -> Dict[str, int]:
+        """Warm the election cache for every bucket the fleet workload can
+        produce.  Measurements land in the process-wide autotune cache
+        keyed on the (mesh-tagged) ``Backend.cache_name``, so ONE warming
+        covers every replica — including any respawned later onto the same
+        mesh shape, which is why respawn never re-measures."""
+        if max_len is None:
+            live = [fr for fr in self._requests if not fr.done]
+            if not live:
+                raise ValueError("no requests to derive the bucket space "
+                                 "from; pass max_len explicitly")
+            max_len = max(min(self.cfg.max_seq,
+                              len(fr.prompt) + fr.max_new_tokens)
+                          for fr in live)
+        rep = next(iter(self.replicas.values()), None)
+        if rep is None:
+            raise RuntimeError("fleet has no replicas to warm through")
+        return rep.server.warm_autotune(max_len, warmup=warmup,
+                                        iters=iters)
+
+    # -- reporting -----------------------------------------------------------
+
+    def _event(self, kind: str, **kw) -> None:
+        self.events.append({"t": time.perf_counter(), "tick": self._tick,
+                            "event": kind, **kw})
+
+    def recovery_times(self) -> List[float]:
+        """Seconds from each kill/evict to the respawn that replaced it
+        (event-log pairing, in order)."""
+        out = []
+        deaths: Deque[float] = deque()
+        for ev in self.events:
+            if ev["event"] in ("kill", "evict"):
+                deaths.append(ev["t"])
+            elif ev["event"] == "respawn" and deaths:
+                out.append(ev["t"] - deaths.popleft())
+        return out
+
+    def summary(self) -> Dict[str, Any]:
+        done = [fr for fr in self._requests if fr.done]
+        lat = [1e3 * (fr.finished_time - fr.submitted) for fr in done
+               if fr.finished_time is not None]
+        ttft = [1e3 * (fr.first_token_time - fr.submitted) for fr in done
+                if fr.first_token_time is not None]
+        tokens = sum(len(fr.generated) for fr in done)
+        wall = ((self._t_last - self._t0)
+                if self._t0 is not None and self._t_last is not None
+                else 0.0)
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        recov = self.recovery_times()
+        return {
+            "replicas": len(self.replicas),
+            "desired": self._desired,
+            "requests": len(done),
+            "in_flight": len(self._requests) - len(done),
+            "tokens": tokens,
+            "tokens_per_s": tokens / wall if wall else 0.0,
+            "ticks": self.stats["ticks"],
+            "latency_ms": {"p50": pct(lat, 50), "p99": pct(lat, 99)},
+            "ttft_ms": {"p50": pct(ttft, 50), "p99": pct(ttft, 99)},
+            "requeued": self.stats["requeued"],
+            "kills": self.stats["kills"],
+            "evicted": self.stats["evicted"],
+            "respawns": self.stats["respawns"],
+            "drained": self.stats["drained"],
+            "rejoined": self.stats["rejoined"],
+            "scale_ups": self.stats["scale_ups"],
+            "scale_downs": self.stats["scale_downs"],
+            "recovery_s": {"max": max(recov) if recov else 0.0,
+                           "events": len(recov)},
+            "served_by": {r.id: r.served
+                          for r in self.replicas.values()},
+        }

@@ -223,6 +223,21 @@ def embedding_table(cfg: ServeConfig) -> np.ndarray:
             ).astype(np.float32)
 
 
+def validate_prompt(cfg: ServeConfig, prompt: Sequence[int]) -> np.ndarray:
+    """Admission-time prompt validation, shared by ``SolServer.submit`` and
+    the fleet router (``launch/fleet.SolFleet.submit``) so a bad request is
+    rejected where it is submitted, not replicas later when it is routed."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    if prompt.size == 0:
+        raise ValueError("empty prompt")
+    if prompt.size >= cfg.max_seq:
+        raise ValueError(f"prompt of {prompt.size} tokens leaves no "
+                         f"room to decode within max_seq={cfg.max_seq}")
+    if np.any(prompt < 0) or np.any(prompt >= cfg.vocab):
+        raise ValueError("prompt token out of vocabulary range")
+    return prompt
+
+
 # ---------------------------------------------------------------------------
 # requests + KV-slot arena
 # ---------------------------------------------------------------------------
@@ -452,15 +467,7 @@ class SolServer:
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                sampling: Optional[SamplingParams] = None) -> Request:
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size == 0:
-            raise ValueError("empty prompt")
-        if prompt.size >= self.cfg.max_seq:
-            raise ValueError(f"prompt of {prompt.size} tokens leaves no "
-                             f"room to decode within max_seq="
-                             f"{self.cfg.max_seq}")
-        if np.any(prompt < 0) or np.any(prompt >= self.cfg.vocab):
-            raise ValueError("prompt token out of vocabulary range")
+        prompt = validate_prompt(self.cfg, prompt)
         sampling = sampling or SamplingParams()
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max(1, int(max_new_tokens)),
@@ -637,6 +644,18 @@ class SolServer:
 
     def close(self) -> None:
         self.queue.close()
+
+    @property
+    def depth(self) -> int:
+        """Requests in flight (queued + resident) — the router's
+        per-replica queue-depth signal."""
+        return len(self._pending) + len(self._active)
+
+    @property
+    def in_flight(self) -> List[Request]:
+        """Every submitted-but-unfinished request, in admission order —
+        what the fleet router re-queues when this replica dies."""
+        return list(self._pending) + list(self._active)
 
     # -- buckets + models ----------------------------------------------------
 
@@ -906,6 +925,67 @@ def _measure_node(node, backend, cache: AT.AutotuneCache, *,
 # driver
 # ---------------------------------------------------------------------------
 
+def _fleet_smoke(cfg: ServeConfig, n_replicas: int, n_requests: int,
+                 gen: int) -> int:
+    """``--fleet N`` smoke: serve the workload through a ``SolFleet`` of N
+    strict-provenance replicas with ONE injected mid-stream replica kill,
+    then verify against an undisturbed same-seed fleet on the same
+    weights: every request must complete (re-queued included) with
+    token-identical output.  What CI's fleet step runs."""
+    from .fleet import FleetConfig, SolFleet
+
+    model = build_lm(cfg)
+    workload = _smoke_workload(cfg, n_requests, gen)
+    samplings = [SamplingParams(temperature=0.8, seed=1000 + i)
+                 for i in range(len(workload))]
+
+    fleet = SolFleet(cfg, FleetConfig(n_replicas=n_replicas), model=model,
+                     strict_provenance=True)
+    reqs = [fleet.submit(p, g, sampling=sp)
+            for (p, g), sp in zip(workload, samplings)]
+    t0 = time.perf_counter()
+    counts = fleet.warm_autotune()
+    print(f"[fleet] autotune warmup on {cfg.backend}: {counts['impls']} "
+          f"impl timings over {counts['nodes']} keys "
+          f"({counts['skipped']} already cached) in "
+          f"{time.perf_counter() - t0:.1f}s — shared by all "
+          f"{n_replicas} replicas")
+    for _ in range(2):              # get requests mid-stream before the kill
+        fleet.tick()
+    killed = fleet.kill()
+    print(f"[fleet] injected kill of replica {killed} at tick "
+          f"{fleet.stats['ticks']}")
+    s = fleet.run()
+    fleet.close()
+    print(f"[fleet] {s['requests']} requests, {s['tokens']} tokens over "
+          f"{s['replicas']} replicas in {s['ticks']} ticks "
+          f"({s['tokens_per_s']:.1f} tok/s); requeued={s['requeued']} "
+          f"respawns={s['respawns']} recovery={s['recovery_s']['max'] * 1e3:.1f}ms; "
+          f"served_by={s['served_by']}")
+    dropped = [r.fid for r in reqs if r.generated is None]
+    if dropped:
+        print(f"[fleet] DROPPED requests after kill: {dropped}",
+              file=sys.stderr)
+        return 1
+
+    base = SolFleet(cfg, FleetConfig(n_replicas=1), model=model,
+                    strict_provenance=True)
+    breqs = [base.submit(p, g, sampling=sp)
+             for (p, g), sp in zip(workload, samplings)]
+    base.run()
+    base.close()
+    diverged = [r.fid for r, b in zip(reqs, breqs)
+                if r.generated != b.generated]
+    if diverged:
+        print(f"[fleet] kill-recovery DIVERGED from the undisturbed "
+              f"same-seed run for requests {diverged}", file=sys.stderr)
+        return 1
+    print(f"[fleet] token output identical to the undisturbed same-seed "
+          f"run for all {len(reqs)} requests "
+          f"({s['requeued']} re-queued across the kill)")
+    return 0
+
+
 def _smoke_workload(cfg: ServeConfig, n_requests: int, gen: int,
                     seed: int = 1) -> List[Tuple[np.ndarray, int]]:
     hi = min(24, cfg.max_seq - gen - 1)    # prompts leave room to decode
@@ -941,6 +1021,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--no-decode", action="store_true",
                     help="serve with the full re-forward baseline instead "
                          "of the incremental decode program")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through a SolFleet of N replicas with one "
+                         "injected mid-stream kill + token-identity check "
+                         "vs an undisturbed fleet (launch/fleet.py)")
     ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL",
                     help="serve across a debug mesh of data,model devices "
                          "(default 1,1 = single device); needs "
@@ -972,6 +1056,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                           max_seq=args.max_seq, max_batch=args.max_batch,
                           slots=args.slots, backend=args.backend,
                           decode=not args.no_decode, mesh=mesh)
+
+    if args.fleet:
+        if args.fleet < 1 or mesh != (1, 1):
+            print("--fleet wants N >= 1 replicas on mesh 1,1 (a replica "
+                  "may itself be a mesh once per-replica meshes get their "
+                  "own devices)", file=sys.stderr)
+            return 2
+        return _fleet_smoke(cfg, args.fleet,
+                            max(args.requests, 4 * args.fleet), args.gen)
 
     server = SolServer(cfg, strict_provenance=True)
     workload = _smoke_workload(cfg, args.requests, args.gen)

@@ -3,9 +3,11 @@ from .async_queue import (AsyncQueue, UseAfterFreeError, VirtualAllocator,
 from .packed import (PackedTransfer, pack_transfer, stage_batch, transfer,
                      unpack_on_device)
 from .straggler import StragglerMonitor
-from .failures import FailureSimulator, run_with_restart
+from .failures import (FailureSimulator, ReplicaFailure, RestartReport,
+                       run_with_restart)
 
 __all__ = ["AsyncQueue", "UseAfterFreeError", "VirtualAllocator",
            "VirtualPtr", "pack_transfer", "unpack_on_device", "transfer",
            "stage_batch", "PackedTransfer", "StragglerMonitor",
-           "FailureSimulator", "run_with_restart"]
+           "FailureSimulator", "ReplicaFailure", "RestartReport",
+           "run_with_restart"]

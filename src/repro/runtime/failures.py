@@ -1,51 +1,46 @@
-"""Node-failure handling: checkpoint/restart with elastic re-shard.
+"""Node-failure handling: typed replica failures + checkpoint/restart.
 
-``run_with_restart`` drives a training function through injected failures:
-on failure the state is restored from the last checkpoint (possibly onto a
-different mesh size — the checkpoint layer is mesh-agnostic) and the data
-loader seeks to the restored step (deterministic stateless pipeline).
+``run_with_restart`` drives a step function through failures: on a
+*restartable* failure the state is restored from the last checkpoint
+(possibly onto a different mesh size — the checkpoint layer is
+mesh-agnostic) and the data loader seeks to the restored step
+(deterministic stateless pipeline).  What counts as restartable is a
+property of the exception TYPE, not its message: anything raising
+:class:`ReplicaFailure` (or passing an injected ``restartable=``
+predicate) takes the restore path; everything else propagates.
 Unit-tested in tests/test_fault_tolerance.py; on a real fleet the failure
 signal comes from the coordination service instead of the simulator.
 
-Serving roles, post-mesh (ROADMAP "Sharded-mesh serving, then a serving
-fleet").  Sharded-mesh serving landed: a replica is now a whole
-mesh-wide ``launch/serve.SolServer`` (its shards live or die together —
-a lost device kills the ``shard_map`` step, so shard failure IS replica
-failure), which keeps the failure domain here per-replica, unchanged.
-``run_with_restart`` is the respawn path: when the straggler monitor
-(``runtime/straggler.py``) or a health check evicts a replica, the
-fleet front-end restarts it through the same checkpoint-restore
-machinery — the "state" being the model parameters plus the warmed
-autotune cache, whose entries carry the mesh tag in their backend key
-(``Backend.cache_name``), so a respawned replica re-enters
-strict-provenance serving on the SAME mesh shape without re-measuring
-its buckets (a different mesh shape means cold per-shard keys: re-warm
-before serving); in-flight requests on the dead replica are re-queued
-by the router, not recovered here.  The elastic re-shard path stays
+Serving roles (ROADMAP "Sharded-mesh serving, then a serving fleet" —
+both landed).  A replica is a whole mesh-wide ``launch/serve.SolServer``
+(its shards live or die together — a lost device kills the ``shard_map``
+step, so shard failure IS replica failure), which keeps the failure
+domain here per-replica.  ``launch/fleet.SolFleet`` is the live consumer:
+its watcher tick treats any restartable exception out of a replica step
+as replica death, re-queues the dead replica's in-flight requests at the
+router (with their original ``SamplingParams`` seeds, so completed output
+is token-identical to an undisturbed run), and respawns the replica
+through ``run_with_restart`` — the "state" being the model parameters
+(checkpoint-restored) plus the warmed autotune cache, whose entries carry
+the mesh tag in their backend key (``Backend.cache_name``), so a
+respawned replica re-enters strict-provenance serving on the SAME mesh
+shape without re-measuring its buckets (a different mesh shape means cold
+per-shard keys: re-warm before serving).  The elastic re-shard path stays
 training-only for now.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 
-class FailureSimulator:
-    """Deterministic injected failures for testing restart logic."""
-
-    def __init__(self, fail_at_steps: Optional[List[int]] = None,
-                 p_fail: float = 0.0, seed: int = 0):
-        self.fail_at = set(fail_at_steps or [])
-        self.p = p_fail
-        self.rng = random.Random(seed)
-        self.failures: List[int] = []
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at or (self.p and self.rng.random() < self.p):
-            self.fail_at.discard(step)
-            self.failures.append(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+class ReplicaFailure(RuntimeError):
+    """A replica (node) died: injected by :class:`FailureSimulator`, or
+    raised by real failure paths — device loss, OOM, a ``ShardingError``
+    escaping a mesh step.  Restart logic keys on this TYPE (historically it
+    string-matched the simulator's message, so every real failure escaped
+    the checkpoint-restore path)."""
 
 
 @dataclasses.dataclass
@@ -55,18 +50,56 @@ class RestartReport:
     recovered_steps: List[int]
 
 
+class FailureSimulator:
+    """Deterministic injected failures for testing restart logic.
+
+    A given step fires AT MOST ONCE over the simulator's lifetime,
+    whichever path triggers it: a scheduled step is consumed when it
+    fires, and a probabilistic (``p_fail``) firing consumes the step too.
+    Restart loops replay steps, so without that rule a step could fail on
+    every replay (``p_fail``) or fire once scheduled and again
+    probabilistically — double-counting ``RestartReport.restarts``."""
+
+    def __init__(self, fail_at_steps: Optional[List[int]] = None,
+                 p_fail: float = 0.0, seed: int = 0):
+        self.fail_at = set(fail_at_steps or [])
+        self.p = p_fail
+        self.rng = random.Random(seed)
+        self.failures: List[int] = []
+        self._fired: set = set()
+
+    def check(self, step: int) -> None:
+        if step in self._fired:
+            return
+        if step in self.fail_at or (self.p and self.rng.random() < self.p):
+            self.fail_at.discard(step)
+            self._fired.add(step)
+            self.failures.append(step)
+            raise ReplicaFailure(f"injected node failure at step {step}")
+
+
+def _default_restartable(e: BaseException) -> bool:
+    return isinstance(e, ReplicaFailure)
+
+
 def run_with_restart(step_fn: Callable[[int, Any], Any],
                      init_state: Any,
                      n_steps: int,
                      ckpt,                       # CheckpointManager
                      failure_sim: Optional[FailureSimulator] = None,
-                     max_restarts: int = 10) -> Tuple[Any, RestartReport]:
+                     max_restarts: int = 10,
+                     restartable: Optional[
+                         Callable[[BaseException], bool]] = None
+                     ) -> Tuple[Any, RestartReport]:
     """Run ``state = step_fn(step, state)`` for n_steps with checkpointing
-    and restart-on-failure."""
+    and restart-on-failure.  ``restartable`` decides which exceptions take
+    the restore path (default: ``isinstance(e, ReplicaFailure)``); others
+    propagate unchanged."""
     state = init_state
     step = 0
     restarts = 0
     recovered: List[int] = []
+    is_restartable = restartable or _default_restartable
     while step < n_steps:
         try:
             if failure_sim is not None:
@@ -74,9 +107,8 @@ def run_with_restart(step_fn: Callable[[int, Any], Any],
             state = step_fn(step, state)
             step += 1
             ckpt.maybe_save(step, state)
-        except RuntimeError as e:
-            if "injected node failure" not in str(e) or \
-                    restarts >= max_restarts:
+        except Exception as e:
+            if not is_restartable(e) or restarts >= max_restarts:
                 raise
             restarts += 1
             ckpt.wait()

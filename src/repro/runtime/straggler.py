@@ -10,25 +10,28 @@ by the trainer):
   * ``evict``     — treat the host as failed → elastic restart path
     (checkpoint restore onto the reduced mesh).
 
-Single-process here: the monitor is driven with recorded per-step times in
-tests; on a real fleet the times come from each host's step clock via the
-coordination service.
+Membership is DYNAMIC: ``record_step`` auto-registers host ids it has not
+seen before (a respawned or autoscaled replica arrives with a fresh id),
+and ``retire`` drops an evicted host so its stale EWMA stops skewing the
+fleet baseline.  Single-process here: the monitor is driven with recorded
+per-step times in tests; on a real fleet the times come from each host's
+step clock via the coordination service.
 
-Serving roles, post-mesh (ROADMAP "Sharded-mesh serving, then a serving
-fleet").  Sharded-mesh serving landed: one ``launch/serve.SolServer``
-now spans a (data, model) mesh, and its ``shard_map`` step is synchronous
-— the slowest SHARD gates every scheduler tick, exactly the SPMD
-straggler shape above.  Within one mesh-wide server the monitor watches
-per-shard step clocks: ``rebalance`` has no in-server analogue (TP/DP
-shard sizes are fixed by the rule engine's divisibility guards), so a
-persistently slow shard escalates straight to ``evict`` = recompiling
-the bucket models on a smaller debug mesh.  Across the FUTURE fleet of
-such servers, the monitor is the per-replica health watcher: a replica's
-step time (or token latency) feeds ``record_step``; ``rebalance`` maps
-to draining the flagged replica's share of the request router, and
-``evict`` maps to drain → evict → respawn through the restart path in
-``runtime/failures.py``.  Nothing here assumes training: the signal is
-"one participant is slower than the fleet", whichever loop produces it.
+Serving roles (ROADMAP "Sharded-mesh serving, then a serving fleet" —
+both landed).  Within one mesh-wide ``launch/serve.SolServer`` the
+``shard_map`` step is synchronous — the slowest SHARD gates every
+scheduler tick, exactly the SPMD straggler shape above; ``rebalance`` has
+no in-server analogue (TP/DP shard sizes are fixed by the rule engine's
+divisibility guards), so a persistently slow shard escalates straight to
+``evict`` = recompiling the bucket models on a smaller debug mesh.
+Across the fleet of such servers, ``launch/fleet.SolFleet`` drives this
+monitor as its per-replica health watcher: every watcher tick feeds each
+replica's step clock into ``record_step``; ``rebalance`` maps to draining
+the flagged replica's share of the request router, and ``evict`` maps to
+drain → evict → respawn through ``runtime/failures.run_with_restart``
+(the evicted id is ``retire``d; the respawn arrives under a fresh id and
+auto-registers).  Nothing here assumes training: the signal is "one
+participant is slower than the fleet", whichever loop produces it.
 """
 from __future__ import annotations
 
@@ -45,7 +48,7 @@ class HostStats:
 
 
 class StragglerMonitor:
-    def __init__(self, n_hosts: int, *, alpha: float = 0.2,
+    def __init__(self, n_hosts: int = 0, *, alpha: float = 0.2,
                  threshold: float = 1.5, evict_threshold: float = 3.0,
                  warmup_steps: int = 5):
         self.hosts: Dict[int, HostStats] = {
@@ -57,16 +60,28 @@ class StragglerMonitor:
         self.history: List[Dict[int, float]] = []
 
     def record_step(self, times: Dict[int, float]) -> None:
+        """Fold one step's per-host clocks into the EWMAs.  Unknown host
+        ids are registered on first sight (dynamic membership: respawned /
+        autoscaled replicas arrive with ids the monitor was never
+        constructed with)."""
         self.history.append(dict(times))
         for h, t in times.items():
-            st = self.hosts[h]
+            st = self.hosts.setdefault(h, HostStats())
             st.ewma = t if st.steps == 0 else \
                 (1 - self.alpha) * st.ewma + self.alpha * t
             st.steps += 1
 
-    def _baseline(self) -> float:
+    def retire(self, host: int) -> None:
+        """Forget an evicted/retired host.  Its EWMA must stop feeding the
+        fleet baseline, and a later re-registration under the same id
+        starts from fresh stats (no-op for unknown ids)."""
+        self.hosts.pop(host, None)
+
+    def baseline(self) -> float:
         """Robust fleet baseline: lower quartile of host EWMAs (the median
-        itself is dragged up when several hosts straggle)."""
+        itself is dragged up when several hosts straggle).  Public: the
+        fleet watcher clips raw step clocks against this before recording,
+        so one compile/GC spike cannot masquerade as sustained slowness."""
         vals = sorted(s.ewma for s in self.hosts.values() if s.steps > 0)
         if not vals:
             return 0.0
@@ -76,7 +91,7 @@ class StragglerMonitor:
 
     def flagged(self) -> Dict[int, str]:
         """host -> 'rebalance' | 'evict'."""
-        med = self._baseline()
+        med = self.baseline()
         out: Dict[int, str] = {}
         if med <= 0:
             return out
@@ -91,11 +106,13 @@ class StragglerMonitor:
         return out
 
     def microbatch_shares(self, base: int = 1) -> Dict[int, float]:
-        """Work shares inversely proportional to EWMA latency (bounded)."""
-        med = self._baseline()
+        """Work shares inversely proportional to EWMA latency (bounded).
+        A host with no samples — or a zero EWMA from a zero-duration
+        recorded step — keeps the full share instead of dividing by it."""
+        med = self.baseline()
         shares = {}
         for h, st in self.hosts.items():
-            if st.steps == 0 or med == 0:
+            if st.steps == 0 or med == 0 or st.ewma <= 0:
                 shares[h] = 1.0
             else:
                 shares[h] = max(0.5, min(1.0, med / st.ewma))

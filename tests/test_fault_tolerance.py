@@ -11,8 +11,8 @@ from repro.checkpoint import CheckpointManager, restore_checkpoint, \
     save_checkpoint
 from repro.checkpoint.manager import latest_step
 from repro.data import DataConfig, SyntheticTokenDataset
-from repro.runtime import FailureSimulator, StragglerMonitor, \
-    run_with_restart
+from repro.runtime import FailureSimulator, ReplicaFailure, \
+    StragglerMonitor, run_with_restart
 
 
 def _state(x=0.0):
@@ -73,6 +73,78 @@ def test_run_with_restart_recovers(tmp_path):
     assert all(s % 5 == 0 for s in report.recovered_steps)
 
 
+def test_restart_gates_on_exception_type_not_message(tmp_path):
+    """Regression: restartability is a property of the exception TYPE.
+    A ``ReplicaFailure`` whose message looks nothing like the simulator's
+    ("injected node failure at step N") must still take the restore path —
+    the old string-matched gating re-raised every real failure."""
+    ckpt = CheckpointManager(str(tmp_path), interval=2, keep=2)
+    died = []
+
+    def step_fn(step, state):
+        if step == 3 and not died:
+            died.append(step)
+            raise ReplicaFailure("device lost: mesh shard 3 unreachable")
+        return {**state, "w": state["w"] + 1.0}
+
+    final, report = run_with_restart(step_fn, _state(), 6, ckpt)
+    assert report.restarts == 1 and report.total_steps == 6
+    assert died == [3]
+
+
+def test_restart_respects_injected_restartable_predicate(tmp_path):
+    """``restartable=`` widens (or narrows) what recovers: here a
+    ``TimeoutError`` — not a ReplicaFailure — is declared restartable."""
+    ckpt = CheckpointManager(str(tmp_path), interval=2, keep=2)
+    died = []
+
+    def step_fn(step, state):
+        if step == 2 and not died:
+            died.append(step)
+            raise TimeoutError("collective timed out")
+        return state
+
+    _, report = run_with_restart(
+        step_fn, _state(), 5, ckpt,
+        restartable=lambda e: isinstance(e, (ReplicaFailure, TimeoutError)))
+    assert report.restarts == 1
+
+
+def test_restart_propagates_non_restartable(tmp_path):
+    """A plain bug (ValueError) must escape immediately — never burn
+    restarts replaying a deterministic failure."""
+    ckpt = CheckpointManager(str(tmp_path), interval=2, keep=2)
+
+    def step_fn(step, state):
+        if step == 2:
+            raise ValueError("NaN loss")
+        return state
+
+    with pytest.raises(ValueError, match="NaN loss"):
+        run_with_restart(step_fn, _state(), 5, ckpt)
+
+
+def test_failure_simulator_fires_each_step_at_most_once(tmp_path):
+    """Regression: combining ``fail_at_steps`` with ``p_fail`` must fire a
+    given step AT MOST once over the simulator's lifetime.  With p_fail=1
+    every fresh step fails exactly once; replayed steps (after restore)
+    must NOT re-fail, or the run can never make progress."""
+    sim = FailureSimulator(fail_at_steps=[3], p_fail=1.0, seed=0)
+    ckpt = CheckpointManager(str(tmp_path), interval=1, keep=2)
+    _, report = run_with_restart(lambda s, st: st, _state(), 6, ckpt,
+                                 failure_sim=sim, max_restarts=10)
+    assert report.total_steps == 6
+    # each step 0..5 fired exactly once — scheduled and probabilistic
+    # firings are not double-counted, replays are free
+    assert sorted(sim.failures) == [0, 1, 2, 3, 4, 5]
+    assert report.restarts == 6
+    # direct check: a consumed step never re-raises
+    sim2 = FailureSimulator(fail_at_steps=[2], p_fail=1.0, seed=0)
+    with pytest.raises(ReplicaFailure):
+        sim2.check(2)
+    sim2.check(2)                          # replay: silent
+
+
 def test_elastic_reshard_restore(tmp_path):
     """Restore with explicit shardings (mesh changed) places correctly."""
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -96,6 +168,44 @@ def test_straggler_monitor_flags_and_rebalances():
     assert 0 not in flags and 1 not in flags
     shares = mon.microbatch_shares()
     assert shares[3] < shares[0]
+
+
+def test_straggler_auto_registers_unknown_hosts():
+    """Regression: dynamic membership.  ``record_step`` must register ids
+    the monitor was never constructed with (respawned/autoscaled replicas
+    arrive with fresh ids) instead of raising KeyError."""
+    mon = StragglerMonitor(warmup_steps=2)
+    assert mon.hosts == {}
+    mon.record_step({7: 1.0, 42: 1.1})
+    assert set(mon.hosts) == {7, 42}
+    for _ in range(5):
+        mon.record_step({7: 1.0, 42: 1.0, 43: 6.0})
+    assert mon.flagged().get(43) == "evict"
+
+
+def test_straggler_retire_drops_stale_stats():
+    """An evicted host's stale EWMA must stop feeding the baseline, and a
+    re-registration under the same id starts from fresh stats."""
+    mon = StragglerMonitor(n_hosts=3, warmup_steps=2)
+    for _ in range(5):
+        mon.record_step({0: 1.0, 1: 1.0, 2: 9.0})
+    assert mon.flagged().get(2) == "evict"
+    mon.retire(2)
+    assert 2 not in mon.hosts and 2 not in mon.flagged()
+    mon.retire(99)                         # unknown id: no-op, no raise
+    mon.record_step({0: 1.0, 1: 1.0, 2: 1.0})
+    assert mon.hosts[2].steps == 1         # fresh, not the old EWMA
+    assert mon.hosts[2].ewma == 1.0
+
+
+def test_straggler_zero_ewma_keeps_full_share():
+    """Regression: a zero-duration recorded step (mocked clock, sub-tick
+    no-op) must not divide by zero in ``microbatch_shares`` — the host
+    keeps the full share until it has a real signal."""
+    mon = StragglerMonitor(n_hosts=2)
+    mon.record_step({0: 0.0, 1: 1.0})
+    shares = mon.microbatch_shares()
+    assert shares[0] == 1.0 and 0.5 <= shares[1] <= 1.0
 
 
 def test_data_pipeline_deterministic_and_seekable():

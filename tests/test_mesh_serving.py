@@ -139,6 +139,7 @@ def _run_child(src: str) -> str:
     return r.stdout
 
 
+@pytest.mark.slow
 def test_mesh_parity_prefill_decode():
     out = _run_child(_CHILD_PARITY)
     assert "FORWARD PARITY OK" in out
@@ -146,6 +147,7 @@ def test_mesh_parity_prefill_decode():
     assert "DECODE PARITY OK" in out
 
 
+@pytest.mark.slow
 def test_mesh_serving_strict_provenance():
     out = _run_child(_CHILD_SERVE)
     assert "MESH SERVE PROVENANCE OK" in out

@@ -53,6 +53,7 @@ print("GRADS OK")
 """
 
 
+@pytest.mark.slow
 def test_moe_shard_map_equals_dense():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
