@@ -148,18 +148,24 @@ def _build(op: str, shape: Tuple[int, ...]):
 def tune(backend_name: str = "pallas_interpret",
          ops: Sequence[str] = DEFAULT_OPS, *,
          tiny: bool = False, warmup: int = 2, iters: int = 5,
-         cache=None) -> List[Tuple[str, float, str]]:
+         cache=None, grads: bool = True) -> List[Tuple[str, float, str]]:
     """Measure every admissible impl of each (op, shape) through the dispatch
     table — sweeping each impl's declared ``Tunable`` config space — and
     record best times (plus winning configs) into ``cache``.  Returns
     benchmark rows for the CSV/JSON harness.
 
-    The per-node sweep itself lives in ``repro.core.measure.sweep_node`` and
-    is shared with the serving warmup (``SolServer.warm_autotune``), so the
-    two measurement paths cannot drift."""
+    Backward impls are swept alongside the forwards (``grads=True``): each
+    family's registered gradient kernels go through their own ``Tunable``
+    spaces and land under the ``_bwd``-suffixed cache op key
+    (``registry.grad_cache_op``), which the training-mode election
+    (``passes.elect_grad_implementations``) reads.
+
+    The per-node sweeps live in ``repro.core.measure`` (``sweep_node`` /
+    ``sweep_node_grad``) and are shared with the serving and training
+    warmups, so the measurement paths cannot drift."""
     from repro.backends import get_backend
     from repro.core import autotune as AT
-    from repro.core.measure import sweep_node
+    from repro.core.measure import sweep_node, sweep_node_grad
 
     backend = get_backend(backend_name)
     cache = cache if cache is not None else AT.get_cache()
@@ -175,6 +181,15 @@ def tune(backend_name: str = "pallas_interpret",
                 if m.config is not None:
                     derived += ";best=" + "x".join(str(d) for d in m.config)
                 rows.append((f"autotune_{backend_name}_{op}_{tag}_"
+                             f"{m.impl}", m.us, derived))
+            if not grads:
+                continue
+            for m in sweep_node_grad(node, vals, backend, cache,
+                                     warmup=warmup, iters=iters):
+                derived = f"configs={m.n_configs}"
+                if m.config is not None:
+                    derived += ";best=" + "x".join(str(d) for d in m.config)
+                rows.append((f"autotune_{backend_name}_{op}_bwd_{tag}_"
                              f"{m.impl}", m.us, derived))
     return rows
 
@@ -491,22 +506,33 @@ def verify_cache(path: str) -> int:
     measured, cold = [], []
     try:
         for (op, _dtype, backend_name), bucket in sorted(groups.items()):
+            # backward measurements live under the _bwd-suffixed op key;
+            # verify them through the grad election on the forward node
+            is_bwd = op.endswith(R.GRAD_SUFFIX)
+            fwd_op = op.removesuffix(R.GRAD_SUFFIX) if is_bwd else op
             try:
                 backend = get_backend(backend_name)
-                node = _node(op, bucket)
+                node = _node(fwd_op, bucket)
             except KeyError:                     # foreign backend / op kind
                 continue
             ins = [i for i in node.inputs if i.op is OpKind.INPUT]
             g = Graph(ins, [node], {})
             passes.elect_implementations(g, backend)
-            tag = f"{backend_name}:{op}→{node.impl}"
-            impl = R.get_impl(node.impl)
+            if is_bwd:
+                passes.elect_grad_implementations(g, backend)
+                elected = node.impl_bwd
+                impl = R.get_grad_impl(elected) if elected else None
+            else:
+                elected = node.impl
+                impl = R.get_impl(elected)
+            tag = f"{backend_name}:{op}→{elected}"
             if impl is not None and impl.tunable is not None:
                 cfg = node.attrs.get(impl.tunable.attr)
                 if cfg:
                     tag += f"[{impl.tunable.attr}="
                     tag += "x".join(str(d) for d in cfg) + "]"
-            if "measured" in g.election_provenance.get(node.impl, {}):
+            if elected and "measured" in g.election_provenance.get(
+                    elected, {}):
                 measured.append(tag)
             else:
                 cold.append(tag)

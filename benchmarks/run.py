@@ -78,6 +78,9 @@ def _table_rows(name: str):
     if name == "sol":
         from . import autotune
         return autotune.sol_rows()
+    if name == "train":
+        from . import train_bench
+        return train_bench.csv_rows()
     raise KeyError(f"unknown table {name!r}")
 
 
@@ -123,7 +126,8 @@ def main() -> int:
     # not — tools/bench_diff.py gates CI on these)
     for table, fname in (("matmul", "BENCH_matmul.json"),
                          ("serving", "BENCH_serve.json"),
-                         ("sol", "BENCH_sol.json")):
+                         ("sol", "BENCH_sol.json"),
+                         ("train", "BENCH_train.json")):
         if not per_table.get(table):
             continue
         out_dir = os.path.dirname(json_path) if json_path else ""

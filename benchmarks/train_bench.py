@@ -1,0 +1,76 @@
+"""Training-step benchmark: fwd-only vs fwd+bwd through elected graphs.
+
+One row pair per model-zoo family: the jitted forward of the
+``optimize(training=True)`` executable, and ``value_and_grad`` of an MSE
+loss through the same executable — every grad-registered node runs its
+elected backward impl via the per-node ``custom_vjp`` wrappers.  The
+``ratio`` derived column (fwd+bwd ÷ fwd) is the number to watch: a backward
+kernel regression shows up as ratio drift even when the forward is stable.
+
+Rows land in ``BENCH_train.json`` (``benchmarks/run.py train``) and ride
+the same ``tools/bench_diff.py`` CI gate as the other perf series.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):
+    import os
+    import sys
+    _here = os.path.dirname(os.path.abspath(__file__))
+    _root = os.path.dirname(_here)
+    for p in (_root, os.path.join(_root, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+B, S, D = 2, 32, 64
+BACKEND = "xla"      # CI tracks step-time trajectory; the kernel-level
+                     # sweeps live in the autotune table
+
+
+def _families():
+    from repro.frontends import nn
+    return [("transformer", lambda: nn.transformer_block(d_model=D,
+                                                         n_heads=4)),
+            ("griffin", lambda: nn.griffin_block(d_model=D)),
+            ("rwkv6", lambda: nn.rwkv6_block(d_model=D))]
+
+
+def csv_rows(warmup: int = 2, iters: int = 5) -> List[Tuple[str, float, str]]:
+    from repro.core.measure import time_call
+    from repro.frontends.optimize import optimize
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    rows: List[Tuple[str, float, str]] = []
+    for name, build in _families():
+        sm = optimize(build(), (B, S, D), backend=BACKEND, training=True)
+        params = sm._params_for_call()
+        n_bwd = sum(count
+                    for kind, impls in sm.impl_report(by_kind=True).items()
+                    if kind.endswith("_bwd")
+                    for count in impls.values())
+
+        fwd = jax.jit(sm._fn)
+        t_fwd = time_call(lambda: fwd(params, x), warmup, iters)
+
+        def loss(p):
+            return ((sm._fn(p, x).astype(jnp.float32) - y) ** 2).mean()
+
+        step = jax.jit(jax.value_and_grad(loss))
+        t_bwd = time_call(lambda: step(params), warmup, iters)
+        rows.append((f"train_{name}_fwd", t_fwd, f"bwd_nodes={n_bwd}"))
+        rows.append((f"train_{name}_fwdbwd", t_bwd,
+                     f"ratio={t_bwd / max(t_fwd, 1e-9):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for n, us, d in csv_rows():
+        print(f"{n},{us:.1f},{d}")

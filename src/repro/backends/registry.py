@@ -91,6 +91,14 @@ HOST_CPU = HardwareSpec(
 # (for FUSED nodes: the side inputs, in node.inputs order).
 ImplFn = Callable[[Node, Sequence[Any], "Backend"], Any]
 
+# grad_fn(node, res, ct, backend) -> tuple of cotangents, one per node input
+# (entries for integer-dtype inputs are ignored by the executor, which
+# substitutes float0 zeros).  ``res`` is the residual pair saved by the
+# forward pass of the executor's ``jax.custom_vjp`` wrapper:
+# ``(primal_inputs_tuple, primal_output)``.  Backward impls are free to
+# recompute anything else they need from the primals (remat-style).
+GradFn = Callable[[Node, Tuple[Tuple[Any, ...], Any], Any, "Backend"], Any]
+
 TIER_BACKEND = 0      # backend-specific kernel
 TIER_SHARED = 1       # shared Pallas kernel (capability-gated)
 TIER_REFERENCE = 2    # XLA/jnp reference lowering
@@ -130,6 +138,17 @@ _BACKEND_IMPLS: Dict[Tuple[str, OpKind], List[Impl]] = {}
 _SHARED_IMPLS: Dict[OpKind, List[Impl]] = {}
 _REFERENCE_IMPLS: Dict[OpKind, Impl] = {}
 _IMPLS_BY_NAME: Dict[str, Impl] = {}
+
+# backward (gradient) dispatch tables — same Impl dataclass, same tiers, same
+# capability gating, but the stored ``fn`` follows the GradFn signature.  Kept
+# as parallel tables (not a slot on the forward Impl) so a node's forward and
+# backward elections are independent: the fastest forward kernel and the
+# fastest backward kernel need not come from the same family member, and the
+# autotune cache keys them separately (op key ``f"{op.value}_bwd"``).
+_GRAD_BACKEND_IMPLS: Dict[Tuple[str, OpKind], List[Impl]] = {}
+_GRAD_SHARED_IMPLS: Dict[OpKind, List[Impl]] = {}
+_GRAD_REFERENCE_IMPLS: Dict[OpKind, Impl] = {}
+_GRAD_IMPLS_BY_NAME: Dict[str, Impl] = {}
 
 
 def _index(impl: Impl) -> Impl:
@@ -203,6 +222,14 @@ def _load_entry_points() -> None:
         from ..kernels.matmul import ops as _m               # noqa: F401
         from ..kernels.rglru_scan import ops as _g           # noqa: F401
         from ..kernels.rwkv6_scan import ops as _r           # noqa: F401
+        # backward entry points (each grad.py registers its impls at import)
+        from ..kernels.avgpool import grad as _ag            # noqa: F401
+        from ..kernels.decode_attention import grad as _dcg  # noqa: F401
+        from ..kernels.dfp_fused import grad as _dg          # noqa: F401
+        from ..kernels.flash_attention import grad as _fg    # noqa: F401
+        from ..kernels.matmul import grad as _mg             # noqa: F401
+        from ..kernels.rglru_scan import grad as _gg         # noqa: F401
+        from ..kernels.rwkv6_scan import grad as _rg         # noqa: F401
     except BaseException:
         _ENTRY_POINTS_STATE = "unloaded"
         raise
@@ -249,6 +276,111 @@ def resolve(backend: "Backend", node: Node) -> Impl:
         raise NotImplementedError(
             f"no implementation of {node.op} for backend {backend.name!r}")
     return cands[0]
+
+
+# ---------------------------------------------------------------------------
+# backward implementations — first-class registry citizens (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+GRAD_SUFFIX = "_bwd"
+
+
+def grad_cache_op(op: OpKind) -> str:
+    """Autotune-cache op key for a backward impl of ``op`` — suffixed so
+    backward timings/configs never collide with forward entries."""
+    return f"{op.value}{GRAD_SUFFIX}"
+
+
+def register_grad_impl(backend: str, op: OpKind, fn: GradFn, *,
+                       name: Optional[str] = None,
+                       supports: Optional[Callable[[Node], bool]] = None,
+                       memory: str = "streamed",
+                       tunable: Optional[Tunable] = None) -> Impl:
+    """Register a backend-specific backward kernel (tier 0)."""
+    impl = Impl(name or f"{backend}.{op.value}{GRAD_SUFFIX}", op, fn,
+                TIER_BACKEND, supports=supports, backend=backend,
+                memory=memory, tunable=tunable)
+    _GRAD_IMPLS_BY_NAME[impl.name] = impl
+    _GRAD_BACKEND_IMPLS.setdefault((backend, op), []).insert(0, impl)
+    return impl
+
+
+def register_shared_grad_impl(op: OpKind, fn: GradFn, *, name: str,
+                              requires: Sequence[str] = (),
+                              supports: Optional[Callable[[Node], bool]] = None,
+                              memory: str = "streamed",
+                              tunable: Optional[Tunable] = None) -> Impl:
+    """Register a shared backward kernel (tier 1, capability-gated)."""
+    impl = Impl(name, op, fn, TIER_SHARED, requires=frozenset(requires),
+                supports=supports, memory=memory, tunable=tunable)
+    _GRAD_IMPLS_BY_NAME[impl.name] = impl
+    _GRAD_SHARED_IMPLS.setdefault(op, []).insert(0, impl)
+    return impl
+
+
+def register_reference_grad_impl(op: OpKind, fn: GradFn, *,
+                                 name: Optional[str] = None,
+                                 memory: str = "roundtrip") -> Impl:
+    """Register the always-available backward reference (tier 2) — usually
+    ``jax.vjp`` of the forward reference lowering, recomputed from primals."""
+    impl = Impl(name or f"ref.{op.value}{GRAD_SUFFIX}", op, fn,
+                TIER_REFERENCE, memory=memory)
+    _GRAD_IMPLS_BY_NAME[impl.name] = impl
+    _GRAD_REFERENCE_IMPLS[op] = impl
+    return impl
+
+
+def get_grad_impl(name: str) -> Optional[Impl]:
+    _load_entry_points()
+    return _GRAD_IMPLS_BY_NAME.get(name)
+
+
+def grad_tunables_for(op: OpKind) -> List[Tunable]:
+    """Every Tunable any backward impl declares for ``op`` (cleared before
+    the backward election pins its winner)."""
+    _load_entry_points()
+    out: List[Tunable] = []
+    for (_b, o), impls in _GRAD_BACKEND_IMPLS.items():
+        if o is op:
+            out += [i.tunable for i in impls if i.tunable is not None]
+    out += [i.tunable for i in _GRAD_SHARED_IMPLS.get(op, ())
+            if i.tunable is not None]
+    return out
+
+
+def grad_candidates(backend: "Backend", node: Node) -> List[Impl]:
+    """Admissible backward impls for (backend, node) that may stand for
+    election: backend-specific first, then shared.
+
+    The reference backward (``jax.vjp`` of the op's reference forward) is
+    deliberately NOT a candidate when any kernel-tier backward is
+    admissible: it materializes the intermediates the kernels exist to
+    avoid (the S×S attention matrix, every recurrent hidden state), so a
+    timing race on a dev box would elect it at toy shapes and then blow
+    device memory at real ones.  It remains the capability *fallback* —
+    when no kernel backward is admissible it is returned alone, keeping
+    every op differentiable on every backend."""
+    _load_entry_points()
+    out: List[Impl] = []
+    for impl in _GRAD_BACKEND_IMPLS.get((backend.name, node.op), []):
+        if impl.admissible(backend, node):
+            out.append(impl)
+    for impl in _GRAD_SHARED_IMPLS.get(node.op, []):
+        if impl.admissible(backend, node):
+            out.append(impl)
+    if not out:
+        ref = _GRAD_REFERENCE_IMPLS.get(node.op)
+        if ref is not None and ref.admissible(backend, node):
+            out.append(ref)
+    return out
+
+
+def resolve_grad(backend: "Backend", node: Node) -> Optional[Impl]:
+    """First admissible backward impl, or None — an op with no registered
+    backward differentiates through its (jnp) forward impl via plain JAX AD,
+    so absence is not an error."""
+    cands = grad_candidates(backend, node)
+    return cands[0] if cands else None
 
 
 # ---------------------------------------------------------------------------

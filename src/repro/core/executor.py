@@ -209,11 +209,48 @@ _REFERENCE_OPS = (
 )
 
 
+def reference_vjp_grad(n: Node, res, ct, backend: "registry.Backend"):
+    """Universal tier-2 backward: ``jax.vjp`` of the op's forward *reference*
+    impl, recomputed from the saved primals (remat-style — no extra residuals
+    beyond the default ``(inputs, output)`` pair).  Works for any op with a
+    registered forward reference, FUSED groups included (vjp of
+    ``compose_fused`` re-derives every body op's gradient op-at-a-time)."""
+    vals, _out = res
+    ref = registry._REFERENCE_IMPLS[n.op]
+    diff = [i for i, v in enumerate(vals)
+            if jnp.issubdtype(jnp.result_type(v), jnp.inexact)]
+
+    def fwd(*xs):
+        full = list(vals)
+        for i, x in zip(diff, xs):
+            full[i] = x
+        return ref.fn(n, full, backend)
+
+    _, pull = jax.vjp(fwd, *[vals[i] for i in diff])
+    cts = pull(ct)
+    out: List[Any] = [None] * len(vals)
+    for i, c in zip(diff, cts):
+        out[i] = c
+    return tuple(out)
+
+
+# Ops whose elected forward can be a Pallas kernel (no JAX AD rule) — these
+# MUST carry a registered backward for training to ride elected forwards.
+# Heavier reference ops join too so their backwards are electable/sweepable;
+# plain elementwise/norm ops differentiate through their jnp lowerings.
+_GRAD_REFERENCE_OPS = (
+    OpKind.LINEAR, OpKind.MATMUL, OpKind.CONV2D, OpKind.AVGPOOL,
+    OpKind.FUSED,
+)
+
+
 def _register_reference_impls() -> None:
     for _op in _REFERENCE_OPS:
         registry.register_reference_impl(_op, _lower_node)
     registry.register_reference_impl(OpKind.FUSED, compose_fused,
                                      name="ref.compose", memory="roundtrip")
+    for _op in _GRAD_REFERENCE_OPS:
+        registry.register_reference_grad_impl(_op, reference_vjp_grad)
 
 
 # ---------------------------------------------------------------------------
@@ -231,8 +268,69 @@ def _impl_for(n: Node, backend: "registry.Backend") -> registry.Impl:
     return registry.resolve(backend, n)
 
 
-def lower_graph(g: Graph, backend: "registry.Backend") -> Callable[..., Any]:
-    """Return fn(params: dict, *inputs) -> outputs evaluating the graph."""
+def _grad_impl_for(n: Node, backend: "registry.Backend"
+                   ) -> registry.Impl | None:
+    """Honour the backward election's annotation when still admissible, else
+    first admissible backward in the chain; None when the op registers no
+    backward (plain JAX AD differentiates its jnp forward impl)."""
+    if n.impl_bwd:
+        impl = registry.get_grad_impl(n.impl_bwd)
+        if impl is not None and impl.op is n.op \
+                and impl.admissible(backend, n):
+            return impl
+    return registry.resolve_grad(backend, n)
+
+
+def _differentiable_call(n: Node, impl: registry.Impl,
+                         grad_impl: registry.Impl,
+                         backend: "registry.Backend") -> Callable[..., Any]:
+    """Pair a node's elected forward with its elected backward under one
+    ``jax.custom_vjp``.  Residuals are the default ``(primal_inputs, output)``
+    pair; the backward impl recomputes anything else it needs.  Integer-dtype
+    primals (e.g. decode lens) receive ``float0`` cotangents, and float
+    cotangents are cast back to the primal dtype so mixed-precision backward
+    math (f32 accumulation) round-trips cleanly."""
+
+    @jax.custom_vjp
+    def call(*vals):
+        return impl.fn(n, list(vals), backend)
+
+    def fwd(*vals):
+        out = impl.fn(n, list(vals), backend)
+        return out, (vals, out)
+
+    def bwd(res, ct):
+        vals, _out = res
+        cts = grad_impl.fn(n, res, ct, backend)
+        cts = tuple(cts) if isinstance(cts, (tuple, list)) else (cts,)
+        if len(cts) != len(vals):
+            raise ValueError(
+                f"{grad_impl.name} returned {len(cts)} cotangents for "
+                f"{len(vals)} inputs of {n}")
+        fixed = []
+        for v, c in zip(vals, cts):
+            if not jnp.issubdtype(jnp.result_type(v), jnp.inexact):
+                fixed.append(np.zeros(jnp.shape(v), jax.dtypes.float0))
+            elif c is None:
+                fixed.append(jnp.zeros_like(v))
+            else:
+                fixed.append(jnp.asarray(c, dtype=jnp.result_type(v)))
+        return tuple(fixed)
+
+    call.defvjp(fwd, bwd)
+    return call
+
+
+def lower_graph(g: Graph, backend: "registry.Backend", *,
+                differentiable: bool = False) -> Callable[..., Any]:
+    """Return fn(params: dict, *inputs) -> outputs evaluating the graph.
+
+    With ``differentiable=True`` every node whose op registers a backward
+    impl is wrapped in ``jax.custom_vjp`` pairing its elected forward with
+    its elected backward — the training path's ``jax.grad`` then rides
+    elected kernels in both directions.  Mesh note: the ``psum_axes``
+    collective stays OUTSIDE the wrapper, so JAX AD transposes it to the
+    psum-correct gradient collective for sharded graphs."""
     order = g.topo()
     input_ids = [id(i) for i in g.inputs]
     param_items = sorted(g.params.items())
@@ -241,6 +339,16 @@ def lower_graph(g: Graph, backend: "registry.Backend") -> Callable[..., Any]:
         if n.op not in (OpKind.INPUT, OpKind.PARAM, OpKind.CONST,
                         OpKind.OUTPUT)
     }
+    # differentiable lowering: bind custom_vjp wrappers once, at lower time
+    calls: Dict[int, Callable[..., Any]] = {}
+    if differentiable:
+        for n in order:
+            if id(n) not in impls:
+                continue
+            gi = _grad_impl_for(n, backend)
+            if gi is not None:
+                calls[id(n)] = _differentiable_call(n, impls[id(n)], gi,
+                                                    backend)
     # CONST sources bind to fill-constants once; under jit they are baked
     # into the lowered program, never staged from the framework.
     const_vals: Dict[int, Array] = {
@@ -261,7 +369,9 @@ def lower_graph(g: Graph, backend: "registry.Backend") -> Callable[..., Any]:
             if n.op in (OpKind.INPUT, OpKind.PARAM):
                 raise ValueError(f"unbound source node {n}")
             vals = [env[id(i)] for i in n.inputs]
-            env[id(n)] = impls[id(n)].fn(n, vals, backend)
+            call = calls.get(id(n))
+            env[id(n)] = (call(*vals) if call is not None
+                          else impls[id(n)].fn(n, vals, backend))
             # row-parallel matmuls under shard_map produce partial sums:
             # shard_graph marks them and the collective lowers here, before
             # any downstream bias add (BIAS_ADD is its own node)

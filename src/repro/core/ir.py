@@ -174,6 +174,8 @@ class Node:
     layout: Optional[str] = None             # set by layout pass
     impl: Optional[str] = None               # Impl name elected by
                                              # passes.elect_implementations
+    impl_bwd: Optional[str] = None           # backward Impl name elected by
+                                             # passes.elect_grad_implementations
     # for FUSED nodes: the ordered list of original nodes in the group
     body: List["Node"] = dataclasses.field(default_factory=list)
 

@@ -118,6 +118,86 @@ def measure_impl_configs(node, vals: Sequence[object], backend, impl,
     return out
 
 
+def measure_grad_impl_configs(node, res, ct, backend, impl,
+                              configs: Sequence[Optional[Tuple[int, ...]]],
+                              *, warmup: int = 2, iters: int = 5,
+                              skip_errors: bool = False
+                              ) -> List[ConfigMeasurement]:
+    """Backward mirror of :func:`measure_impl_configs`: times a *gradient*
+    impl (``fn(node, res, ct, backend)`` signature) once per config.
+    ``res`` is the registry residual pair ``(primal_inputs, primal_out)``
+    and ``ct`` the output cotangent."""
+    vals, out = res
+    tun = impl.tunable
+    results: List[ConfigMeasurement] = []
+    try:
+        for cfg in configs:
+            if tun is not None:
+                tun.bind_config(node, cfg)
+            try:
+                fn = jax.jit(lambda o_, c_, *a:
+                             impl.fn(node, (a, o_), c_, backend))
+                t = time_call_stats(lambda: fn(out, ct, *vals),
+                                    warmup, iters)
+            except Exception as e:
+                if not skip_errors:
+                    raise
+                results.append(ConfigMeasurement(
+                    cfg, float("inf"), float("inf"),
+                    error=f"{type(e).__name__}: {e}"))
+                continue
+            results.append(ConfigMeasurement(cfg, t.min_us, t.mean_us))
+    finally:
+        if tun is not None:
+            tun.bind_config(node, None)    # never leave a sweep's pin behind
+    return results
+
+
+def sweep_node_grad(node, vals: Sequence[object], backend, cache, *,
+                    warmup: int = 2, iters: int = 5
+                    ) -> List[ImplMeasurement]:
+    """Measure every admissible *backward* impl of ``node`` — each gradient
+    impl's own Tunable space swept exactly like the forwards — and record
+    best times under the ``_bwd``-suffixed cache op key
+    (``registry.grad_cache_op``), which the backward election reads."""
+    import jax.numpy as jnp
+
+    from ..backends import registry as R
+    from . import autotune as AT
+    from .passes import _node_cost_terms
+
+    grads = R.grad_candidates(backend, node)
+    if not grads:
+        return []
+    ref = R._REFERENCE_IMPLS[node.op]
+    out = jax.jit(lambda *a: ref.fn(node, list(a), backend))(*vals)
+    ct = jnp.ones_like(out)
+    res = (tuple(vals), out)
+    flops, streamed, roundtrip = _node_cost_terms(node)
+    flops, streamed, roundtrip = 2 * flops, 2 * streamed, 2 * roundtrip
+    op_key = R.grad_cache_op(node.op)
+    results: List[ImplMeasurement] = []
+    for impl in grads:
+        tun = impl.tunable
+        configs: List[Optional[Tuple[int, ...]]] = [None]
+        if tun is not None:
+            space = tun.tune_space(node, backend.hw)
+            if space:
+                configs = list(space)
+        measured = measure_grad_impl_configs(node, res, ct, backend, impl,
+                                             configs, warmup=warmup,
+                                             iters=iters)
+        best = min(measured, key=lambda r: r.us)
+        nbytes = roundtrip if impl.memory == "roundtrip" else streamed
+        cache.record(op_key, AT.node_shape(node), node.spec.dtype,
+                     backend.cache_name, impl.name, best.us,
+                     config=best.config, flops=flops, nbytes=nbytes,
+                     mean_us=best.mean_us)
+        results.append(ImplMeasurement(impl.name, best.us, best.config,
+                                       len(configs), mean_us=best.mean_us))
+    return results
+
+
 def sweep_node(node, vals: Sequence[object], backend, cache, *,
                warmup: int = 2, iters: int = 5) -> List[ImplMeasurement]:
     """Measure every admissible impl of ``node`` on ``backend`` using the

@@ -425,6 +425,84 @@ def elect_implementations(g: Graph, backend: "object") -> Graph:
     return g
 
 
+def elect_grad_implementations(g: Graph, backend: "object") -> Graph:
+    """Backward-impl election — the forward election's exact mirror over the
+    gradient dispatch table (``registry.grad_candidates``).
+
+    Measured timings come from the autotune cache under the ``_bwd``-suffixed
+    op key (``registry.grad_cache_op``), so forward and backward sweeps never
+    collide; the analytical fallback costs a backward as roughly two
+    forward-sized programs (dX and dW / dKV and dQ).  Winners land on
+    ``node.impl_bwd``, tuned configs pin through the backward impl's own
+    ``Tunable`` (attrs suffixed ``_bwd``, so clearing them never drops a
+    forward pin), and elections/provenance merge into the graph's existing
+    election dicts under the ``_bwd`` op key — ``impl_report`` and
+    ``check_provenance`` see the backward program exactly like the forward
+    one."""
+    from ..backends import registry as R
+    from . import autotune
+
+    cache = autotune.get_cache()
+    elections: Dict[str, int] = getattr(g, "elections", {}) or {}
+    by_op: Dict[str, Dict[str, int]] = getattr(g, "elections_by_op", {}) or {}
+    provenance: Dict[str, Dict[str, int]] = \
+        getattr(g, "election_provenance", {}) or {}
+    pinned: Dict[str, List[Tuple[int, ...]]] = \
+        getattr(g, "election_pinned", {}) or {}
+    for n in g.topo():
+        if n.op in SOURCE_OPS or n.op is OpKind.OUTPUT:
+            continue
+        cands = R.grad_candidates(backend, n)
+        if not cands:
+            n.impl_bwd = None     # JAX AD differentiates the jnp forward
+            continue
+        op_key = R.grad_cache_op(n.op)
+        flops, streamed, roundtrip = _node_cost_terms(n)
+        flops, streamed, roundtrip = 2 * flops, 2 * streamed, 2 * roundtrip
+        by_name = {c.name: c for c in cands}
+        measured = {name: m for name, m in cache.lookup(
+            op_key, autotune.node_shape(n), n.spec.dtype,
+            backend.cache_name).items() if name in by_name}
+
+        cfg = None
+        if measured:
+            best_name = min(measured,
+                            key=lambda nm: (measured[nm].us,
+                                            by_name[nm].tier))
+            best = by_name[best_name]
+            cfg = measured[best_name].config
+            source = "measured"
+        else:
+            cal = cache.calibration(backend.cache_name, op_key)
+
+            def cost(impl: "R.Impl") -> Tuple[float, int]:
+                nbytes = roundtrip if impl.memory == "roundtrip" else streamed
+                if cal:
+                    t = cal["s_per_flop"] * flops + cal["s_per_byte"] * nbytes
+                else:
+                    t = backend.hw.roofline_s(flops, nbytes)
+                return (t, impl.tier)
+
+            best = min(cands, key=cost)
+            source = "calibrated" if cal else "analytical"
+        for t in R.grad_tunables_for(n.op):
+            t.bind_config(n, None)
+        if cfg and best.tunable is not None:
+            best.tunable.bind_config(n, tuple(cfg))
+            pinned.setdefault(best.name, []).append(tuple(cfg))
+        n.impl_bwd = best.name
+        elections[best.name] = elections.get(best.name, 0) + 1
+        per = by_op.setdefault(op_key, {})
+        per[best.name] = per.get(best.name, 0) + 1
+        src = provenance.setdefault(best.name, {})
+        src[source] = src.get(source, 0) + 1
+    g.elections = elections
+    g.elections_by_op = by_op
+    g.election_provenance = provenance
+    g.election_pinned = pinned
+    return g
+
+
 # ----------------------------------------------------------------------------
 # pipeline
 # ----------------------------------------------------------------------------
@@ -439,4 +517,6 @@ def run_pipeline(g: Graph, backend: "object",
     g = form_fusion_groups(g)
     g = assign_layouts(g, backend)
     g = elect_implementations(g, backend)
+    if training:
+        g = elect_grad_implementations(g, backend)
     return g

@@ -137,6 +137,54 @@ def jit_train_step(mesh: Mesh, cfg: ArchConfig, opts: StepOptions,
 
 
 # ---------------------------------------------------------------------------
+# SOL-pipeline training: fwd AND bwd ride the elected graph
+# ---------------------------------------------------------------------------
+
+def make_sol_train_step(model, opts: StepOptions,
+                        loss_fn: Optional[Callable] = None
+                        ) -> Tuple[Callable, Callable]:
+    """Train step over a ``SolModel`` compiled with ``training=True``:
+    ``jax.value_and_grad`` of the loss differentiates straight through the
+    elected graph, where every grad-registered node is a ``custom_vjp``
+    pairing its elected forward with its elected backward — both directions
+    run tuned, provenance-audited kernels.  Mesh-compiled models work
+    unchanged: the psum collectives sit outside the per-node wrappers, so
+    AD transposes them into the psum-correct gradient collectives.
+
+    Returns ``(train_step, init_state)``; ``train_step(state, batch)`` with
+    ``batch = {"x": ..., "y": ...}`` reuses the same AdamW + cosine
+    schedule as the backbone trainer (``optim/``)."""
+    ocfg = AdamWConfig(lr=opts.lr, moment_dtype=opts.moment_dtype)
+
+    def default_loss(out, batch):
+        tgt = batch["y"].astype(jnp.float32)
+        return ((out.astype(jnp.float32) - tgt) ** 2).mean()
+
+    lf = loss_fn or default_loss
+
+    def loss(params, batch):
+        return lf(model._fn(params, batch["x"]), batch)
+
+    def init_state(params: Optional[Dict[str, Any]] = None):
+        p = dict(params) if params is not None \
+            else dict(model._params_for_call())
+        return {"params": p, "opt": init_opt_state(p, ocfg),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def train_step(state, batch):
+        lval, grads = jax.value_and_grad(loss)(state["params"], batch)
+        lr = cosine_schedule(state["step"], peak_lr=opts.lr,
+                             warmup=opts.warmup, total=opts.total_steps)
+        new_params, new_opt, om = adamw_update(state["params"], grads,
+                                               state["opt"], ocfg, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": lval, "lr": lr, **om}
+
+    return train_step, init_state
+
+
+# ---------------------------------------------------------------------------
 # serving
 # ---------------------------------------------------------------------------
 

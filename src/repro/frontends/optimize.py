@@ -191,14 +191,14 @@ def compile_graph(model: nn.Module, graph, backend: str | Backend = "xla",
     bk = backend if isinstance(backend, Backend) else get_backend(backend)
     if mesh is None:
         graph = passes.run_pipeline(graph, bk, training=training)
-        raw_fn = lower_graph(graph, bk)
+        raw_fn = lower_graph(graph, bk, differentiable=training)
         return SolModel(model, graph, bk, jax.jit(raw_fn))
 
     from ..distributed import sharding as shd
     graph = shd.shard_graph(graph, mesh)
     bk = shd.mesh_backend(bk, mesh)
     graph = passes.run_pipeline(graph, bk, training=training)
-    raw_fn = lower_graph(graph, bk)
+    raw_fn = lower_graph(graph, bk, differentiable=training)
     out_specs = (graph.output_specs[0] if len(graph.output_specs) == 1
                  else tuple(graph.output_specs))
     sharded = shd.shard_map(

@@ -1,0 +1,39 @@
+"""AveragePooling backward: uniform spreading as a grouped convolution.
+
+For stride-1 VALID average pooling every input pixel receives ct/area from
+each window that covers it — a full-padding correlation of the cotangent
+with a ones/area kernel, expressed as one grouped ``conv_general_dilated``
+(feature_group_count=C) so XLA lowers it as a single fused op instead of
+the scatter loop AD of ``reduce_window`` produces.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ...backends import registry
+from ...core.ir import Node, OpKind
+from .ops import _supports
+
+Array = jax.Array
+
+
+def _avgpool_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    (x,), _out = res
+    k = n.attrs.get("kernel", 2)
+    kh, kw = (k, k) if isinstance(k, int) else k
+    c = x.shape[1]
+    kern = jnp.full((c, 1, kh, kw), 1.0 / (kh * kw), dtype=jnp.float32)
+    dx = jax.lax.conv_general_dilated(
+        ct.astype(jnp.float32), kern, window_strides=(1, 1),
+        padding=((kh - 1, kh - 1), (kw - 1, kw - 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c)
+    return (dx.astype(x.dtype),)
+
+
+registry.register_shared_grad_impl(
+    OpKind.AVGPOOL, _avgpool_grad_impl, name="conv.avgpool_bwd",
+    supports=_supports)

@@ -1,0 +1,17 @@
+"""Decode-attention backward: vjp of the reference oracle.
+
+Decode steps are inference-only in practice, but the op still joins the
+gradient dispatch table so a graph containing DECODE_ATTENTION nodes stays
+differentiable end-to-end (e.g. RL-style fine-tuning over served decode
+programs).  The integer ``lens`` operand naturally receives a ``float0``
+cotangent through the executor's custom_vjp wrapper.
+"""
+from __future__ import annotations
+
+from ...backends import registry
+from ...core import executor
+from ...core.ir import OpKind
+
+registry.register_reference_grad_impl(
+    OpKind.DECODE_ATTENTION, executor.reference_vjp_grad,
+    name="ref.decode_attention_bwd", memory="roundtrip")

@@ -1,0 +1,31 @@
+"""DFP fusion-group backward: recompute-and-vjp of the composed chain.
+
+A FUSED node's forward may be the single-launch Pallas DFP kernel (which has
+no AD rule); its backward recomputes the group op-at-a-time through
+``compose_fused`` — body ops still resolve through the dispatch table — and
+``jax.vjp``s that chain, remat-style: no per-op intermediate survives the
+forward pass, and the backward's recompute stays VMEM-friendly under jit.
+Registered at the shared tier (streamed memory) so FUSED nodes elect a
+non-reference backward; the reference tier (``ref.fused_bwd``) is the same
+math charged with roundtrip memory.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from ...backends import registry
+from ...core import executor
+from ...core.ir import Node, OpKind
+
+
+def _fused_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    vals, _out = res
+    _, pull = jax.vjp(
+        lambda *xs: executor.compose_fused(n, list(xs), backend), *vals)
+    return pull(ct)
+
+
+registry.register_shared_grad_impl(
+    OpKind.FUSED, _fused_grad_impl, name="recompute.fused_bwd")

@@ -1,0 +1,227 @@
+"""Flash-attention backward as a first-class dispatch-table impl.
+
+The canonical home of the chunked flash backward math: ``models/flash.py``'s
+eager ``flash_mha`` VJP delegates here, and the registry-backed gradient path
+(``OpKind.ATTENTION`` backward election) wraps the same scans — eager and
+elected backwards cannot drift.
+
+Memory story (why this beats AD of the forward): AD through the
+online-softmax KV-chunk scan saves every per-chunk probability tensor
+(B,KV,G,Sq,C f32) across the scan.  The flash backward instead keeps O(S)
+residuals — here the *default* registry residuals (q, k, v, o) — recomputes
+the logsumexp rows with a cheap m/l-only sweep, then per chunk:
+
+  D = Σ do·o;  p = exp(softcap(qkᵀ) − L);
+  dv = pᵀdo;  ds = p⊙(do vᵀ − D);  through-softcap chain;
+  dq accumulated, dk/dv emitted per chunk.
+
+The KV-chunk length is the backward's own ``Tunable``
+(``node.attrs['attn_block_bwd']``), swept and elected independently of the
+forward's (bq, bk) blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...backends import registry
+from ...core import executor
+from ...core.autotune import Tunable
+from ...core.ir import Node, OpKind
+from .._util import round_up
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 1024
+
+
+def chunks(x: Array, nc: int, c: int):
+    b = x.shape[0]
+    return x.reshape(b, nc, c, *x.shape[2:]).transpose(
+        1, 0, 2, *range(3, x.ndim + 1))
+
+
+def mask_for(sq: int, c: int, j0: Array, causal: bool, window: int,
+             skv: int):
+    """(Sq, C) validity mask for the chunk starting at kv position j0."""
+    qp = jnp.arange(sq)[:, None]
+    kp = j0 + jnp.arange(c)[None, :]
+    m = kp < skv
+    if causal:
+        m &= qp >= kp
+    if window:
+        m &= qp - kp < window
+    return m
+
+
+def _pad_kv(k: Array, v: Array, nc: int, chunk: int):
+    pad = nc * chunk - k.shape[1]
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k, v
+
+
+def fwd_scan(qg: Array, k: Array, v: Array, *, causal: bool, window: int,
+             cap: float, chunk: int) -> Tuple[Array, Array]:
+    """Online-softmax forward.  qg: (B,Sq,KV,G,hd); k, v: (B,Skv,KV,hd)
+    → (o: (B,KV,G,Sq,hd) f32, lse: (B,KV,G,Sq) f32)."""
+    b, sq, kvh, g, hd = qg.shape
+    skv = k.shape[1]
+    nc = (skv + chunk - 1) // chunk
+    k, v = _pad_kv(k, v, nc, chunk)
+    kc = chunks(k, nc, chunk)
+    vc = chunks(v, nc, chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        j, kb, vb = xs
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                            preferred_element_type=jnp.float32) * scale
+        if cap:
+            logits = jnp.tanh(logits / cap) * cap
+        msk = mask_for(sq, chunk, j * chunk, causal, window, skv)
+        logits = jnp.where(msk[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kvh, g, sq), jnp.float32),
+            jnp.zeros((b, kvh, g, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nc), kc, vc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))              # (B,KV,G,Sq)
+    return o, lse
+
+
+def lse_scan(qg: Array, k: Array, *, causal: bool, window: int,
+             cap: float, chunk: int) -> Array:
+    """Recompute only the logsumexp rows (no p·v accumulation) — what the
+    registry backward needs when the fwd residuals are just (q, k, v, o)."""
+    b, sq, kvh, g, hd = qg.shape
+    skv = k.shape[1]
+    nc = (skv + chunk - 1) // chunk
+    pad = nc * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = chunks(k, nc, chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, xs):
+        m, l = carry
+        j, kb = xs
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                            preferred_element_type=jnp.float32) * scale
+        if cap:
+            logits = jnp.tanh(logits / cap) * cap
+        msk = mask_for(sq, chunk, j * chunk, causal, window, skv)
+        logits = jnp.where(msk[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l_new = l * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]).sum(-1)
+        return (m_new, l_new), None
+
+    init = (jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kvh, g, sq), jnp.float32))
+    (m, l), _ = jax.lax.scan(step, init, (jnp.arange(nc), kc))
+    return m + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def bwd_scan(q: Array, k: Array, v: Array, lse: Array, dsum: Array,
+             do: Array, *, causal: bool, window: int, cap: float,
+             chunk: int) -> Tuple[Array, Array, Array]:
+    """Chunked flash backward.  q, do: (B,Sq,H,hd); k, v: (B,Skv,KV,hd);
+    lse, dsum: (B,KV,G,Sq) f32 → (dq, dk, dv) in the primal dtypes."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    skv = k.shape[1]
+    nc = (skv + chunk - 1) // chunk
+    kp, vp = _pad_kv(k, v, nc, chunk)
+    kc = chunks(kp, nc, chunk)
+    vc = chunks(vp, nc, chunk)
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    dog = do.reshape(b, sq, kvh, g, hd).astype(jnp.float32) \
+        .transpose(0, 2, 3, 1, 4)           # (B,KV,G,Sq,hd)
+
+    def step(dq_acc, xs):
+        j, kb, vb = xs
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                            preferred_element_type=jnp.float32) * scale
+        if cap:
+            capped = jnp.tanh(logits / cap) * cap
+        else:
+            capped = logits
+        msk = mask_for(sq, chunk, j * chunk, causal, window, skv)
+        capped = jnp.where(msk[None, None, None], capped, -1e30)
+        p = jnp.exp(capped - lse[..., None])            # (B,KV,G,Sq,C)
+        dv = jnp.einsum("bkgqs,bkgqd->bskd", p, dog)
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", dog, vb.astype(jnp.float32))
+        ds = p * (dp - dsum[..., None])                 # grad wrt capped
+        if cap:
+            ds = ds * (1.0 - (capped / cap) ** 2)
+        ds = jnp.where(msk[None, None, None], ds, 0.0)
+        dq_c = jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                          kb.astype(jnp.float32)) * scale
+        dk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qg) * scale
+        return dq_acc + dq_c, (dk, dv)
+
+    dq0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (jnp.arange(nc), kc, vc))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, kvh, hd)[:, :skv]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, kvh, hd)[:, :skv]
+    return (dq.reshape(b, sq, h, hd).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+# -- dispatch-table entry: backward of OpKind.ATTENTION over (q, k, v) -------
+
+def attn_bwd_tune_space(n: Node, hw) -> List[Tuple[int]]:
+    """Candidate KV-chunk lengths for the backward scan: powers of two
+    clamped to the (lane-rounded) sequence length, deduplicated."""
+    if len(n.spec.shape) != 4:
+        return []
+    s = n.spec.shape[1]
+    cap_len = round_up(s, 128)
+    return [(c,) for c in sorted({min(c, cap_len)
+                                  for c in (128, 256, 512, 1024)})]
+
+
+def _attention_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    (q, k, v), o = res
+    cfg = n.attrs.get("attn_block_bwd")
+    chunk = int(cfg[0]) if cfg else DEFAULT_CHUNK
+    causal = n.attrs.get("causal", True)
+    window = n.attrs.get("window", 0)
+    cap = n.attrs.get("cap", 0.0)
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    lse = lse_scan(qg, k, causal=causal, window=window, cap=cap, chunk=chunk)
+    og = o.reshape(b, sq, kvh, g, hd).astype(jnp.float32) \
+        .transpose(0, 2, 3, 1, 4)
+    dog = ct.reshape(b, sq, kvh, g, hd).astype(jnp.float32) \
+        .transpose(0, 2, 3, 1, 4)
+    dsum = (dog * og).sum(-1)                           # (B,KV,G,Sq)
+    return bwd_scan(q, k, v, lse, dsum, ct, causal=causal, window=window,
+                    cap=cap, chunk=chunk)
+
+
+registry.register_shared_grad_impl(
+    OpKind.ATTENTION, _attention_grad_impl, name="flash.attention_bwd",
+    supports=lambda n: len(n.spec.shape) == 4,
+    tunable=Tunable("attn_block_bwd", attn_bwd_tune_space))
+registry.register_reference_grad_impl(
+    OpKind.ATTENTION, executor.reference_vjp_grad,
+    name="ref.attention_bwd", memory="roundtrip")

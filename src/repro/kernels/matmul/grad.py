@@ -1,0 +1,80 @@
+"""Matmul / Linear backward on the tiled MXU kernel.
+
+dA and dB of ``y = x @ w`` are themselves matmuls — ``dx = ct @ wᵀ`` and
+``dw = xᵀ @ ct`` — so the backward rides the same Pallas MXU kernel as the
+forward, with its *own* tile ``Tunable`` (``node.attrs['mxu_block_bwd']``):
+the dx matmul's (M, N, K) problem shape differs from the forward's
+(M, K, N), so the forward's elected tile is not assumed optimal and the
+backward is swept/elected independently.  The Linear flavour adds the bias
+reduction and maps dw back to the stored weight orientation through the
+same ``linear_weight_kn`` heuristic the forward uses.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ...backends import registry
+from ...core.autotune import Tunable, node_shape
+from ...core.ir import Node, OpKind
+from .kernel import Block, tile_space
+from .ops import _supports_linear, _supports_matmul, matmul
+
+Array = jax.Array
+
+
+def _bwd_block(n: Node) -> Block | None:
+    cfg = n.attrs.get("mxu_block_bwd")
+    return tuple(cfg) if cfg else None
+
+
+def _dx_dw(x: Array, w_kn: Array, ct: Array, block: Block | None,
+           interpret: bool):
+    """x: (..., K); w_kn: (K, N); ct: (..., N) → (dx, dw_kn)."""
+    dx = matmul(ct, w_kn.T, block=block, interpret=interpret)
+    x2d = x.reshape(-1, x.shape[-1])
+    ct2d = ct.reshape(-1, ct.shape[-1])
+    # the dw problem (K, M, N) has different dims — let the kernel pick its
+    # default tile rather than force the dx matmul's tuned block on it
+    dw_kn = matmul(x2d.T, ct2d, interpret=interpret)
+    return dx, dw_kn
+
+
+def _matmul_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    (x, w), _out = res
+    dx, dw = _dx_dw(x, w, ct, _bwd_block(n), backend.interpret)
+    return dx, dw
+
+
+def _linear_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    from ...core.executor import linear_weight_kn
+    vals, _out = res
+    x, w = vals[0], vals[1]
+    w_kn = linear_weight_kn(n, w)
+    dx, dw_kn = _dx_dw(x, w_kn, ct, _bwd_block(n), backend.interpret)
+    dw = dw_kn.T if w.shape[0] == n.attrs["out_features"] else dw_kn
+    outs = [dx, dw]
+    if len(vals) > 2 and vals[2] is not None:
+        axes = tuple(range(ct.ndim - 1))
+        outs.append(ct.sum(axes))
+    return tuple(outs)
+
+
+def _mxu_bwd_tune_space(n: Node, hw) -> List[Block]:
+    shp = node_shape(n)                   # (M, K, N), batch folded into M
+    if not shp or len(shp) != 3:
+        return []
+    m, k, nn = shp
+    return tile_space(m, nn, k, hw)       # the dx matmul: (M, N) · (N, K)
+
+
+_MXU_BWD_TUNABLE = Tunable("mxu_block_bwd", _mxu_bwd_tune_space)
+
+registry.register_shared_grad_impl(
+    OpKind.MATMUL, _matmul_grad_impl, name="pallas.matmul_mxu_bwd",
+    requires=("mxu",), supports=_supports_matmul, tunable=_MXU_BWD_TUNABLE)
+registry.register_shared_grad_impl(
+    OpKind.LINEAR, _linear_grad_impl, name="pallas.linear_mxu_bwd",
+    requires=("mxu",), supports=_supports_linear, tunable=_MXU_BWD_TUNABLE)

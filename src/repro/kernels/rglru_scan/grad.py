@@ -1,0 +1,63 @@
+"""RGLRU backward: the reverse recurrence IS an rglru scan.
+
+For h_t = a_t·h_{t-1} + b_t the cotangent recurrence is
+
+  g_t = ḣ_t + a_{t+1}·g_{t+1}        (g_{T-1} = ḣ_{T-1})
+
+which, read in reversed time, is exactly another gated linear recurrence —
+coefficients rev(a) shifted right one step, additions rev(ḣ), zero initial
+state.  The backward therefore reuses the *same Pallas scan kernel* as the
+forward, with its own channel-block ``Tunable``
+(``node.attrs['rglru_block_bwd']``).  The remaining grads are elementwise:
+
+  db_t = g_t;   da_t = g_t·h_{t-1}  (h_{-1} = h0);   dh0 = a_0·g_0
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...backends import registry
+from ...core import executor
+from ...core.autotune import Tunable
+from ...core.ir import Node, OpKind
+from .kernel import DEFAULT_BD
+from .ops import _clamp_bd, rglru_scan, rglru_refine_space, rglru_tune_space
+
+Array = jax.Array
+
+
+def _rglru_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    (a, b, h0), h = res
+    cfg = n.attrs.get("rglru_block_bwd")
+    bd = _clamp_bd(cfg[0], a.shape[-1]) if cfg else DEFAULT_BD
+    af = a.astype(jnp.float32)
+    ctf = ct.astype(jnp.float32)
+    # reversed-time scan coefficients: coeff_i = a_{T-i} (first step unused —
+    # the zero initial state absorbs it)
+    a_rev = jnp.flip(af, axis=1)
+    coeff = jnp.concatenate([jnp.ones_like(a_rev[:, :1]), a_rev[:, :-1]],
+                            axis=1)
+    zeros0 = jnp.zeros_like(h0, dtype=jnp.float32)
+    g_rev = rglru_scan(coeff, jnp.flip(ctf, axis=1), zeros0, bd=bd,
+                       interpret=backend.interpret)[0]
+    g = jnp.flip(g_rev, axis=1)
+    h_prev = jnp.concatenate(
+        [h0.astype(jnp.float32)[:, None], h.astype(jnp.float32)[:, :-1]],
+        axis=1)
+    da = g * h_prev
+    db = g
+    dh0 = af[:, 0] * g[:, 0]
+    return da, db, dh0
+
+
+registry.register_shared_grad_impl(
+    OpKind.RGLRU_SCAN, _rglru_grad_impl, name="pallas.rglru_scan_bwd",
+    requires=("pallas",), supports=lambda n: len(n.spec.shape) == 3,
+    tunable=Tunable("rglru_block_bwd", rglru_tune_space,
+                    refine=rglru_refine_space))
+registry.register_reference_grad_impl(
+    OpKind.RGLRU_SCAN, executor.reference_vjp_grad,
+    name="ref.rglru_scan_bwd")

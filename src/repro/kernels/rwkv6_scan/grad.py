@@ -1,0 +1,90 @@
+"""RWKV6 backward via chunk-level gradient checkpointing.
+
+The WKV state is an hd×hd matrix per head — saving it for every timestep
+(what plain AD of the per-step scan does) costs O(T·hd²) HBM.  Instead the
+backward re-runs the forward recurrence once storing only the state at each
+chunk boundary, then sweeps the chunks in reverse, ``jax.vjp``-ing the
+per-chunk reference math with the carried state cotangent.  Peak residency
+is O(T/bt·hd² + bt·hd) — the time-block length ``bt`` is the backward's own
+``Tunable`` (``node.attrs['rwkv6_block_bwd']``), a genuine memory/recompute
+knob elected independently of the forward's block.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...backends import registry
+from ...core import executor
+from ...core.autotune import Tunable
+from ...core.ir import Node, OpKind
+from .ops import rwkv6_refine_space, rwkv6_tune_space
+
+Array = jax.Array
+
+
+def _chunk_fwd(rc, kc, vc, wc, u, s):
+    """One chunk of the WKV recurrence.  rc..wc: (bt,B,H,hd) f32;
+    u: (H,hd); s: (B,H,hd,hd) → (o: (bt,B,H,hd), s_out)."""
+
+    def step(s_, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = ((s_ + u[None, :, :, None] * kv) * rt[..., :, None]).sum(axis=-2)
+        s_ = jnp.exp(wt)[..., :, None] * s_ + kv
+        return s_, o
+
+    s_out, o = jax.lax.scan(step, s, (rc, kc, vc, wc))
+    return o, s_out
+
+
+def _rwkv6_grad_impl(n: Node, res, ct, backend: "registry.Backend"):
+    (r, k, v, logw, u, s0), _o = res
+    b, t, h, hd = r.shape
+    cfg = n.attrs.get("rwkv6_block_bwd")
+    bt = math.gcd(int(cfg[0]), t) if cfg else math.gcd(16, t)
+    nc = t // bt
+    rf, kf, vf, wf = (x.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      .reshape(nc, bt, b, h, hd)
+                      for x in (r, k, v, logw))       # (NC,bt,B,H,hd)
+    ctf = ct.astype(jnp.float32).transpose(1, 0, 2, 3) \
+        .reshape(nc, bt, b, h, hd)
+    uf = u.astype(jnp.float32)
+    s0f = s0.astype(jnp.float32)
+
+    # pass 1: chunk-boundary states only (the checkpoints)
+    def boundary(s, xs):
+        rc, kc, vc, wc = xs
+        _o, s_out = _chunk_fwd(rc, kc, vc, wc, uf, s)
+        return s_out, s                                # emit the chunk's s_in
+    _s_last, s_ins = jax.lax.scan(boundary, s0f, (rf, kf, vf, wf))
+
+    # pass 2: reverse sweep, vjp of each chunk from its checkpoint
+    def bwd_step(carry, xs):
+        ds, du = carry                                 # ds: (B,H,hd,hd)
+        s_in, rc, kc, vc, wc, ctc = xs
+        _out, pull = jax.vjp(_chunk_fwd, rc, kc, vc, wc, uf, s_in)
+        dr, dk, dv, dw, du_c, ds_in = pull((ctc, ds))
+        return (ds_in, du + du_c), (dr, dk, dv, dw)
+
+    init = (jnp.zeros_like(s0f), jnp.zeros_like(uf))
+    (ds0, du), (drs, dks, dvs, dws) = jax.lax.scan(
+        bwd_step, init, (s_ins, rf, kf, vf, wf, ctf), reverse=True)
+
+    def unchunk(x):
+        return x.reshape(nc * bt, b, h, hd).transpose(1, 0, 2, 3)
+    return (unchunk(drs), unchunk(dks), unchunk(dvs), unchunk(dws),
+            du, ds0)
+
+
+registry.register_shared_grad_impl(
+    OpKind.RWKV6_SCAN, _rwkv6_grad_impl, name="ckpt.rwkv6_scan_bwd",
+    supports=lambda n: len(n.spec.shape) == 4,
+    tunable=Tunable("rwkv6_block_bwd", rwkv6_tune_space,
+                    refine=rwkv6_refine_space))
+registry.register_reference_grad_impl(
+    OpKind.RWKV6_SCAN, executor.reference_vjp_grad,
+    name="ref.rwkv6_scan_bwd")

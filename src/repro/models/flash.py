@@ -1,87 +1,26 @@
-"""Flash attention with a hand-written VJP (jnp, GQA, window, softcap).
+"""Eager flash attention: a thin ``custom_vjp`` over the registry-backed
+backward math.
 
-Why this exists: AD through the online-softmax KV-chunk scan saves every
-per-chunk probability tensor (B,KV,G,Sq,C f32) across the layer scan — on
-qwen2-1.5b × train_4k that is the dominant HBM-traffic term (memory term
-7.3 s at baseline).  The flash backward recomputes chunk logits from
-(q, k, v, L) instead:
-
-  fwd residuals: q, k, v, o (bf16) + L = logsumexp rows (f32)   — O(S)
-  bwd: D = Σ do·o; per chunk p = exp(softcap(qkᵀ) − L);
-       dv = pᵀdo; ds = p⊙(do vᵀ − D); through-softcap chain;
-       dq accumulated, dk/dv emitted per chunk.
-
-This is the jnp mirror of kernels/flash_attention (the Pallas TPU kernel);
-both validate against the same oracle in tests.
+The chunked forward/backward scans live ONCE, in
+``kernels/flash_attention/grad.py`` — the same functions the dispatch
+table's ``flash.attention_bwd`` impl runs when an elected graph is
+differentiated — so the eager path (this wrapper, used by ``models/layers``)
+and the elected path cannot drift numerically.  The only difference is the
+residual policy: eager saves the f32 grouped output and the logsumexp rows
+from its forward (no recompute); the registry path keeps the default
+(q, k, v, o) residuals and recomputes lse with an m/l-only sweep.
 """
 from __future__ import annotations
 
 import functools
-import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.flash_attention.grad import bwd_scan, fwd_scan
+
 Array = jax.Array
-
-
-def _chunks(x: Array, nc: int, c: int):
-    b, s = x.shape[0], x.shape[1]
-    return x.reshape(b, nc, c, *x.shape[2:]).transpose(
-        1, 0, 2, *range(3, x.ndim + 1))
-
-
-def _mask_for(sq: int, c: int, j0: Array, causal: bool, window: int,
-              skv: int):
-    """(Sq, C) validity mask for the chunk starting at kv position j0."""
-    qp = jnp.arange(sq)[:, None]
-    kp = j0 + jnp.arange(c)[None, :]
-    m = kp < skv
-    if causal:
-        m &= qp >= kp
-    if window:
-        m &= qp - kp < window
-    return m
-
-
-def _fwd_scan(qg, k, v, *, causal, window, cap, chunk):
-    b, sq, kvh, g, hd = qg.shape
-    skv = k.shape[1]
-    nc = (skv + chunk - 1) // chunk
-    pad = nc * chunk - skv
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    kc = _chunks(k, nc, chunk)
-    vc = _chunks(v, nc, chunk)
-    scale = 1.0 / math.sqrt(hd)
-
-    def step(carry, xs):
-        m, l, acc = carry
-        j, kb, vb = xs
-        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
-                            preferred_element_type=jnp.float32) * scale
-        if cap:
-            logits = jnp.tanh(logits / cap) * cap
-        msk = _mask_for(sq, chunk, j * chunk, causal, window, skv)
-        logits = jnp.where(msk[None, None, None], logits, -1e30)
-        m_new = jnp.maximum(m, logits.max(-1))
-        p = jnp.exp(logits - m_new[..., None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(-1)
-        acc_new = acc * corr[..., None] + jnp.einsum(
-            "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb)
-        return (m_new, l_new, acc_new), None
-
-    init = (jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32),
-            jnp.zeros((b, kvh, g, sq), jnp.float32),
-            jnp.zeros((b, kvh, g, sq, hd), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(
-        step, init, (jnp.arange(nc), kc, vc))
-    o = acc / jnp.maximum(l, 1e-30)[..., None]
-    lse = m + jnp.log(jnp.maximum(l, 1e-30))              # (B,KV,G,Sq)
-    return o, lse
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -98,63 +37,25 @@ def _flash_fwd(q, k, v, causal, window, cap, chunk):
     b, sq, h, hd = q.shape
     kvh = k.shape[2]
     qg = q.reshape(b, sq, kvh, h // kvh, hd)
-    o, lse = _fwd_scan(qg, k, v, causal=causal, window=window, cap=cap,
-                       chunk=chunk)
+    o, lse = fwd_scan(qg, k, v, causal=causal, window=window, cap=cap,
+                      chunk=chunk)
     o_out = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
     return o_out, (q, k, v, o, lse)
 
 
 def _flash_fwd_rule(q, k, v, causal, window, cap, chunk):
-    o_out, res = _flash_fwd(q, k, v, causal, window, cap, chunk)
-    return o_out, res
+    return _flash_fwd(q, k, v, causal, window, cap, chunk)
 
 
 def _flash_bwd_rule(causal, window, cap, chunk, res, do):
     q, k, v, o, lse = res                   # o: (B,KV,G,Sq,hd) f32
     b, sq, h, hd = q.shape
     kvh = k.shape[2]
-    g = h // kvh
-    skv = k.shape[1]
-    nc = (skv + chunk - 1) // chunk
-    pad = nc * chunk - skv
-    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
-    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
-    kc = _chunks(kp, nc, chunk)
-    vc = _chunks(vp, nc, chunk)
-    scale = 1.0 / math.sqrt(hd)
-    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
-    dog = do.reshape(b, sq, kvh, g, hd).astype(jnp.float32) \
+    dog = do.reshape(b, sq, kvh, h // kvh, hd).astype(jnp.float32) \
         .transpose(0, 2, 3, 1, 4)           # (B,KV,G,Sq,hd)
     dsum = (dog * o).sum(-1)                # (B,KV,G,Sq)
-
-    def step(dq_acc, xs):
-        j, kb, vb = xs
-        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
-                            preferred_element_type=jnp.float32) * scale
-        if cap:
-            capped = jnp.tanh(logits / cap) * cap
-        else:
-            capped = logits
-        msk = _mask_for(sq, chunk, j * chunk, causal, window, skv)
-        capped = jnp.where(msk[None, None, None], capped, -1e30)
-        p = jnp.exp(capped - lse[..., None])            # (B,KV,G,Sq,C)
-        dv = jnp.einsum("bkgqs,bkgqd->bskd", p, dog)
-        dp = jnp.einsum("bkgqd,bskd->bkgqs", dog, vb.astype(jnp.float32))
-        ds = p * (dp - dsum[..., None])                 # grad wrt capped
-        if cap:
-            ds = ds * (1.0 - (capped / cap) ** 2)
-        ds = jnp.where(msk[None, None, None], ds, 0.0)
-        dq_c = jnp.einsum("bkgqs,bskd->bqkgd", ds,
-                          kb.astype(jnp.float32)) * scale
-        dk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qg) * scale
-        return dq_acc + dq_c, (dk, dv)
-
-    dq0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
-    dq, (dks, dvs) = jax.lax.scan(step, dq0, (jnp.arange(nc), kc, vc))
-    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, kvh, hd)[:, :skv]
-    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, kvh, hd)[:, :skv]
-    return (dq.reshape(b, sq, h, hd).astype(q.dtype),
-            dk.astype(k.dtype), dv.astype(v.dtype))
+    return bwd_scan(q, k, v, lse, dsum, do, causal=causal, window=window,
+                    cap=cap, chunk=chunk)
 
 
 flash_mha.defvjp(_flash_fwd_rule, _flash_bwd_rule)

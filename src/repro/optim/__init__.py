@@ -1,6 +1,6 @@
-from .adamw import (AdamWConfig, init_opt_state, adamw_update,
+from .adamw import (AdamWConfig, global_norm, init_opt_state, adamw_update,
                     opt_state_specs)
 from .schedule import cosine_schedule
 
-__all__ = ["AdamWConfig", "init_opt_state", "adamw_update",
+__all__ = ["AdamWConfig", "global_norm", "init_opt_state", "adamw_update",
            "opt_state_specs", "cosine_schedule"]

@@ -267,3 +267,106 @@ def test_matrix_covers_every_kernel_family():
     have = {op for (_b, op) in R._BACKEND_IMPLS} | set(R._SHARED_IMPLS)
     missing = have - set(case_kinds.values())
     assert not missing, f"kernel families without a conformance case: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# backward matrix: every registered gradient impl vs jax.vjp of the family's
+# ref.py oracle (the same pullback ``executor.reference_vjp_grad`` serves as
+# the capability fallback), every tuned config, f32 + bf16
+# ---------------------------------------------------------------------------
+
+# Backward tolerances get headroom over the forward table: a pullback chains
+# the forward's reductions twice (recompute + transpose), so f32 kernels are
+# pinned at 1e-4 (1e-3 for the recurrences, whose reverse scans re-associate
+# the whole sequence) and bf16 at the format's ~3 digits with the same
+# recurrence allowance.
+GRAD_TOLERANCE = {
+    "linear":     {"float32": (1e-4, 1e-4), "bfloat16": (5e-2, 5e-2)},
+    "matmul":     {"float32": (1e-4, 1e-4), "bfloat16": (5e-2, 5e-2)},
+    "attention":  {"float32": (1e-4, 1e-4), "bfloat16": (5e-2, 5e-2)},
+    "attention_tp_shard": {"float32": (1e-4, 1e-4),
+                           "bfloat16": (5e-2, 5e-2)},
+    "rglru_scan": {"float32": (1e-3, 1e-4), "bfloat16": (5e-2, 5e-2)},
+    "rwkv6_scan": {"float32": (1e-3, 1e-4), "bfloat16": (1e-1, 1e-1)},
+    "fused":      {"float32": (1e-4, 1e-4), "bfloat16": (5e-2, 5e-2)},
+    "avgpool":    {"float32": (1e-4, 1e-4), "bfloat16": (5e-2, 5e-2)},
+}
+
+# decode_attention and conv2d carry only the reference-vjp fallback, which
+# IS the oracle — testing it against itself would be vacuous, so they are
+# exempt here (the coverage guard below only demands cases for families
+# with a non-reference backward).
+GRAD_CASES = {op: CASES[op] for op in GRAD_TOLERANCE}
+
+
+def _grad_oracle(node, vals, backend, ct):
+    """``jax.vjp`` of the family's reference forward — per-input cotangents,
+    None for non-inexact inputs.  Shared with the executor's capability
+    fallback so the oracle and the fallback can never drift."""
+    from repro.core.executor import reference_vjp_grad
+    out = R._REFERENCE_IMPLS[node.op].fn(node, list(vals), backend)
+    return out, reference_vjp_grad(node, (tuple(vals), out), ct, backend)
+
+
+@pytest.mark.parametrize("backend_name", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("op", sorted(GRAD_CASES))
+def test_grad_conformance(op, dtype, backend_name):
+    """Every admissible *backward* impl of (op, backend, dtype) — and every
+    config in its declared tune space — produces the same per-input
+    cotangents as ``jax.vjp`` of the family's ref.py oracle, under the
+    GRAD_TOLERANCE table."""
+    backend = get_backend(backend_name)
+    node, vals, _ref = GRAD_CASES[op](dtype)
+    cands = R.grad_candidates(backend, node)
+    if not cands or all(c.tier == R.TIER_REFERENCE for c in cands):
+        pytest.skip(f"no non-reference backward for {op} on {backend_name}")
+    rtol, atol = GRAD_TOLERANCE[op][dtype]
+    ct = _arr(node.spec.shape, dtype)
+    out, oracle = _grad_oracle(node, vals, backend, ct)
+    res = (tuple(vals), out)
+    ran = 0
+    for impl in cands:
+        configs = [None]
+        if impl.tunable is not None:
+            space = impl.tunable.tune_space(node, backend.hw)
+            if space:
+                configs = space
+        for cfg in configs:
+            if impl.tunable is not None:
+                impl.tunable.bind_config(node, cfg)
+            grads = impl.fn(node, res, ct, backend)
+            assert len(grads) == len(vals), (impl.name, len(grads))
+            for i, (g, o) in enumerate(zip(grads, oracle)):
+                if o is None:
+                    continue
+                assert g is not None, \
+                    f"{impl.name} dropped the input-{i} cotangent"
+                np.testing.assert_allclose(
+                    np.asarray(g, np.float32), np.asarray(o, np.float32),
+                    rtol=rtol, atol=atol,
+                    err_msg=f"{impl.name} d(input {i}) cfg={cfg} on "
+                            f"{backend_name}/{dtype}")
+            ran += 1
+        if impl.tunable is not None:
+            impl.tunable.bind_config(node, None)
+    assert ran >= len(cands)
+
+
+def test_grad_matrix_covers_every_backward_family():
+    """Registering a non-reference backward impl forces a GRAD_CASES entry
+    (or an explicit exemption here) — the backward matrix must not silently
+    drop a family, mirroring the forward coverage guard."""
+    R._load_entry_points()
+    case_kinds = {
+        "linear": OpKind.LINEAR, "matmul": OpKind.MATMUL,
+        "attention": OpKind.ATTENTION,
+        "attention_tp_shard": OpKind.ATTENTION,
+        "rglru_scan": OpKind.RGLRU_SCAN, "rwkv6_scan": OpKind.RWKV6_SCAN,
+        "fused": OpKind.FUSED, "avgpool": OpKind.AVGPOOL,
+    }
+    assert set(case_kinds) == set(GRAD_CASES)
+    have = ({op for (_b, op) in R._GRAD_BACKEND_IMPLS}
+            | set(R._GRAD_SHARED_IMPLS))
+    missing = have - set(case_kinds.values())
+    assert not missing, f"backward families without a grad case: {missing}"

@@ -1,0 +1,164 @@
+"""Optimizer unit tests: ``optim.adamw`` against a NumPy oracle (bias
+correction, global-norm clipping, weight decay, bf16 moment storage) and
+``optim.cosine_schedule`` at the edge steps (0, warmup boundary, total,
+beyond-total)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (AdamWConfig, adamw_update, cosine_schedule,
+                         global_norm, init_opt_state)
+
+
+def _numpy_adamw(params, grads, m, v, step, ocfg, lr):
+    """Straightforward NumPy re-derivation of one AdamW step (f32 math,
+    moments stored back in ``ocfg.moment_dtype``)."""
+    gnorm = np.sqrt(sum(np.sum(np.square(g.astype(np.float32)))
+                        for g in grads.values()))
+    scale = min(1.0, ocfg.grad_clip / (gnorm + 1e-9)) if ocfg.grad_clip \
+        else 1.0
+    c1 = 1.0 - ocfg.beta1 ** step
+    c2 = 1.0 - ocfg.beta2 ** step
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        g = grads[k].astype(np.float32) * scale
+        m32 = m[k].astype(np.float32) * ocfg.beta1 + (1 - ocfg.beta1) * g
+        v32 = v[k].astype(np.float32) * ocfg.beta2 + (1 - ocfg.beta2) * g * g
+        mh, vh = m32 / c1, v32 / c2
+        delta = mh / (np.sqrt(vh) + ocfg.eps) \
+            + ocfg.weight_decay * params[k].astype(np.float32)
+        out_p[k] = params[k].astype(np.float32) - lr * delta
+        out_m[k], out_v[k] = m32, v32
+    return out_p, out_m, out_v, gnorm
+
+
+def _tree(rng, scale=1.0):
+    return {"w": jnp.asarray(rng.standard_normal((4, 8)) * scale,
+                             jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((8,)) * scale,
+                             jnp.float32)}
+
+
+def test_adamw_first_step_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    ocfg = AdamWConfig()
+    params, grads = _tree(rng), _tree(rng, 0.01)   # small grads: no clipping
+    state = init_opt_state(params, ocfg)
+    lr = 1e-3
+    new_p, new_s, metrics = adamw_update(params, grads, state, ocfg,
+                                         jnp.float32(lr))
+    m0 = {k: np.zeros_like(np.asarray(v)) for k, v in params.items()}
+    ref_p, ref_m, ref_v, ref_gnorm = _numpy_adamw(
+        {k: np.asarray(v) for k, v in params.items()},
+        {k: np.asarray(v) for k, v in grads.items()},
+        m0, dict(m0), 1, ocfg, lr)
+    assert int(new_s["step"]) == 1
+    np.testing.assert_allclose(float(metrics["grad_norm"]), ref_gnorm,
+                               rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(new_p[k]), ref_p[k],
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+        np.testing.assert_allclose(np.asarray(new_s["m"][k]), ref_m[k],
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+        np.testing.assert_allclose(np.asarray(new_s["v"][k]), ref_v[k],
+                                   rtol=1e-6, atol=1e-9, err_msg=k)
+
+
+def test_adamw_multi_step_bias_correction():
+    """Three chained steps track the oracle — the bias-correction terms
+    (1 - beta^t) must use the *incremented* step count each time."""
+    rng = np.random.default_rng(1)
+    ocfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)  # isolate moments
+    params = _tree(rng)
+    state = init_opt_state(params, ocfg)
+    np_p = {k: np.asarray(v) for k, v in params.items()}
+    np_m = {k: np.zeros_like(v) for k, v in np_p.items()}
+    np_v = {k: np.zeros_like(v) for k, v in np_p.items()}
+    lr = 1e-2
+    for t in range(1, 4):
+        grads = _tree(rng, 0.1)
+        params, state, _ = adamw_update(params, grads, state, ocfg,
+                                        jnp.float32(lr))
+        np_p, np_m, np_v, _ = _numpy_adamw(
+            np_p, {k: np.asarray(v) for k, v in grads.items()},
+            np_m, np_v, t, ocfg, lr)
+        assert int(state["step"]) == t
+        for k in params:
+            np.testing.assert_allclose(np.asarray(params[k]), np_p[k],
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"step {t} {k}")
+
+
+def test_adamw_clips_large_gradients():
+    """A gradient with global norm >> grad_clip is rescaled to the clip
+    threshold before entering the moments."""
+    ocfg = AdamWConfig(weight_decay=0.0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    grads = {"w": jnp.full((4,), 100.0, jnp.float32)}   # gnorm = 200
+    state = init_opt_state(params, ocfg)
+    _, new_s, metrics = adamw_update(params, grads, state, ocfg,
+                                     jnp.float32(1e-3))
+    np.testing.assert_allclose(float(metrics["grad_norm"]), 200.0, rtol=1e-6)
+    # clipped g = 100 * (1/200) = 0.5 per element → m = (1-b1) * 0.5
+    np.testing.assert_allclose(np.asarray(new_s["m"]["w"]),
+                               np.full((4,), (1 - ocfg.beta1) * 0.5),
+                               rtol=1e-5)
+
+
+def test_adamw_bf16_moments_cast_and_store():
+    ocfg = AdamWConfig(moment_dtype="bfloat16")
+    rng = np.random.default_rng(2)
+    params, grads = _tree(rng), _tree(rng, 0.1)
+    state = init_opt_state(params, ocfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    new_p, new_s, _ = adamw_update(params, grads, state, ocfg,
+                                   jnp.float32(1e-3))
+    assert new_s["m"]["w"].dtype == jnp.bfloat16
+    assert new_s["v"]["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.float32            # params stay f32
+    # bf16 storage must still move in the oracle's direction, within the
+    # format's ~3 digits
+    m0 = {k: np.zeros_like(np.asarray(v), np.float32)
+          for k, v in params.items()}
+    ref_p, _, _, _ = _numpy_adamw(
+        {k: np.asarray(v) for k, v in params.items()},
+        {k: np.asarray(v) for k, v in grads.items()},
+        m0, dict(m0), 1, ocfg, 1e-3)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref_p["w"],
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_global_norm_matches_numpy():
+    rng = np.random.default_rng(3)
+    tree = _tree(rng)
+    ref = np.sqrt(sum(np.sum(np.square(np.asarray(v)))
+                      for v in tree.values()))
+    np.testing.assert_allclose(float(global_norm(tree)), ref, rtol=1e-6)
+
+
+def test_cosine_schedule_edges():
+    peak, warmup, total = 1e-3, 10, 100
+    lr = lambda s: float(cosine_schedule(jnp.asarray(s, jnp.int32),
+                                         peak_lr=peak, warmup=warmup,
+                                         total=total))
+    assert lr(0) == 0.0                               # linear warmup from 0
+    np.testing.assert_allclose(lr(5), peak * 0.5, rtol=1e-6)
+    np.testing.assert_allclose(lr(warmup), peak, rtol=1e-6)  # cosine peak
+    # halfway through decay: min_frac + (1-min_frac)/2 of peak
+    np.testing.assert_allclose(lr(55), peak * (0.1 + 0.9 * 0.5), rtol=1e-6)
+    np.testing.assert_allclose(lr(total), peak * 0.1, rtol=1e-6)  # floor
+    np.testing.assert_allclose(lr(total + 50), peak * 0.1, rtol=1e-6)
+
+
+def test_cosine_schedule_monotone_decay_after_warmup():
+    peak, warmup, total = 3e-4, 5, 50
+    vals = [float(cosine_schedule(jnp.asarray(s, jnp.int32), peak_lr=peak,
+                                  warmup=warmup, total=total))
+            for s in range(warmup, total + 1)]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_cosine_schedule_zero_warmup():
+    lr0 = float(cosine_schedule(jnp.asarray(0, jnp.int32), peak_lr=1e-3,
+                                warmup=0, total=10))
+    np.testing.assert_allclose(lr0, 1e-3, rtol=1e-6)  # no warmup: start at peak
